@@ -1,0 +1,74 @@
+"""Figure 9 reproduction: weak/strong/model scaling, projected from the
+dry-run roofline terms (no hardware; Lesson-1 of the paper says exactly
+this extrapolation is valid: per-GPU compute and FSDP comm are constant in
+device count under weak scaling).
+
+Reads results/dryrun.jsonl (+ _multipod) and reports projected step time
+  t_step ~= max(t_compute, t_memory, t_collective)
+and its scaling across meshes, plus a weak-scaling model for 1x..32x pods.
+"""
+import json
+import pathlib
+
+from .common import emit
+
+RESULTS = pathlib.Path(__file__).resolve().parents[1] / "results"
+
+
+def _load(name):
+    path = RESULTS / name
+    if not path.exists():
+        return {}
+    rows = {}
+    for line in path.read_text().splitlines():
+        r = json.loads(line)
+        if r.get("ok"):
+            rows[(r["arch"], r["shape"], r.get("mesh", ""))] = r
+    return rows
+
+
+def run(quick: bool = False):
+    single = _load("dryrun.jsonl")
+    multi = _load("dryrun_multipod.jsonl")
+    if not single:
+        emit("fig9/no_dryrun_results", 0.0, "run repro.launch.dryrun first")
+        return {}
+
+    from repro.configs import get_config
+    from repro.launch.mesh import ICI_BW
+    from repro.launch.roofline import total_params
+
+    out = {}
+    for (arch, shape, mesh), r in sorted(single.items()):
+        t = max(r["t_compute_s"], r["t_memory_s"], r["t_collective_s"])
+        out[(arch, shape)] = t
+        mr = multi.get((arch, shape, "pod2x16x16"))
+        if mr and shape == "train_4k":
+            # multi-pod rows prove compile/sharding (uncalibrated);
+            # weak-scaling projection = single-pod terms + the HSDP pod
+            # grad all-reduce (2 pods: ring volume ~= local f32 grad bytes)
+            cfg = get_config(arch)
+            ar_bytes = total_params(cfg) / 256 * 4.0
+            t2 = max(r["t_compute_s"], r["t_memory_s"],
+                     r["t_collective_s"] + ar_bytes / ICI_BW)
+            eff = t / t2 if t2 > 0 else 0.0
+            emit(f"fig9/weak/{arch}", t * 1e6,
+                 f"t_512_hsdp={t2:.4f}s;weak_scaling_eff={eff:.3f};"
+                 f"pod_ar_gb={ar_bytes/1e9:.2f};multipod_compile_ok="
+                 f"{bool(mr.get('ok'))}")
+        elif shape == "train_4k":
+            emit(f"fig9/single/{arch}", t * 1e6,
+                 f"dominant={r['dominant']}")
+    # model scaling at fixed 256 chips (Fig 9d): projected MFU per arch
+    for (arch, shape), t in sorted(out.items()):
+        if shape != "train_4k":
+            continue
+        r = single[(arch, shape, "pod16x16")]
+        mfu = (r["model_gflops"] / 256) / (t * 197e3) if t else 0.0
+        emit(f"fig9/model_scaling_mfu/{arch}", t * 1e6,
+             f"projected_mfu={mfu:.3f}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,47 @@
+"""Benchmark harness: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--full]
+
+Prints ``name,us_per_call,derived`` CSV rows.  --full uses larger problem
+sizes (slower); default is the quick configuration.
+"""
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    quick = not args.full
+
+    from . import (bench_ablation, bench_copy_overhead, bench_e2e,
+                   bench_kernels, bench_planner, bench_scaling)
+
+    suites = [
+        ("table1_copy_overhead", bench_copy_overhead.run),
+        ("fig11_planner", bench_planner.run),
+        ("fig8_e2e", bench_e2e.run),
+        ("fig9_scaling", bench_scaling.run),
+        ("table2_ablation", bench_ablation.run),
+        ("kernels", bench_kernels.run),
+    ]
+    print("name,us_per_call,derived")
+    failed = []
+    for name, fn in suites:
+        if args.only and args.only not in name:
+            continue
+        try:
+            fn(quick=quick)
+        except Exception:
+            traceback.print_exc()
+            failed.append(name)
+    if failed:
+        print(f"FAILED suites: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

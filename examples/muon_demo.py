@@ -1,0 +1,59 @@
+"""Figure 10(b) reproduction: distributed Muon vs AdamW loss curves.
+
+Muon's Newton-Schulz step needs whole 2-D matrices; RaggedShard's
+redistribute (here: layer-resharding across the FSDP group, DESIGN.md)
+gives each device a load-balanced set of full matrices to precondition.
+
+    PYTHONPATH=src python examples/muon_demo.py
+"""
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.configs import build_model, get_config
+from repro.core.fsdp import FSDPRuntime
+from repro.data.pipeline import DataConfig, SyntheticStream
+from repro.launch.mesh import make_local_mesh
+from repro.optim import make_optimizer
+
+STEPS = 120
+
+
+def run(optname: str, lr: float):
+    cfg = dataclasses.replace(
+        get_config("qwen2.5-14b").reduced(), optimizer=optname,
+        learning_rate=lr)
+    mesh = make_local_mesh(1, 1)
+    model = build_model(cfg)
+    rt = FSDPRuntime(model, mesh)
+    params = rt.init_params(0)
+    opt = make_optimizer(cfg)
+    state = opt.init(rt)
+    fn = rt.make_train_step(opt)
+    stream = SyntheticStream(DataConfig(cfg.vocab, 64, 8, seed=2), cfg)
+    step = jnp.int32(0)
+    losses = []
+    for i in range(STEPS):
+        b = stream.shard(stream.batch(i), rt)
+        params, state, step, m = fn(params, state, step, b)
+        losses.append(float(m["loss"]))
+    return losses
+
+
+def main():
+    adamw = run("adamw", 1e-3)
+    muon = run("muon", 3e-3)
+    print(f"{'step':>5s} {'adamw':>8s} {'muon':>8s}")
+    for i in range(0, STEPS, 10):
+        print(f"{i:5d} {adamw[i]:8.4f} {muon[i]:8.4f}")
+    print(f"final {adamw[-1]:8.4f} {muon[-1]:8.4f}")
+    print("\npaper Fig.10b: Muon converges faster, stabilizing ~0.01 lower. "
+          "At this 2-layer/256-d smoke scale the advantage is within noise; "
+          "we check Muon trains comparably (gap < 0.25) -- the distributed "
+          "redistribute machinery itself is verified exactly in "
+          "tests/test_multidevice.py and tests/test_optim.py")
+    assert muon[-1] <= adamw[-1] + 0.25, (muon[-1], adamw[-1])
+
+
+if __name__ == "__main__":
+    main()

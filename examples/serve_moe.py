@@ -1,0 +1,49 @@
+"""Batched MoE serving example: prefill + decode with ZeRO-3 parameter
+gathering and top-k expert routing.
+
+    PYTHONPATH=src python examples/serve_moe.py
+"""
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import build_model, get_config
+from repro.core.fsdp import FSDPRuntime
+from repro.launch.mesh import make_local_mesh
+
+
+def main():
+    cfg = get_config("granite-moe-1b-a400m").reduced()
+    mesh = make_local_mesh(1, 1)
+    model = build_model(cfg)
+    rt = FSDPRuntime(model, mesh)
+    params = rt.init_params(0)
+    prefill = rt.make_prefill_step()
+    decode = rt.make_decode_step()
+
+    B, P, GEN = 4, 24, 12
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab, (B, P)), jnp.int32)}
+    cache = model.init_cache(B, P + GEN)
+
+    t0 = time.time()
+    logits, cache = prefill(params, batch, cache)
+    nxt = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+    print(f"prefill {B} prompts x {P} tokens "
+          f"({cfg.n_experts} experts, top-{cfg.top_k}) in {time.time()-t0:.2f}s")
+
+    seqs = [np.asarray(nxt)]
+    for i in range(GEN - 1):
+        db = {"tokens": nxt[:, None]}
+        logits, cache = decode(params, db, cache, jnp.int32(P + i))
+        nxt = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+        seqs.append(np.asarray(nxt))
+    gen = np.stack(seqs, 1)
+    for b in range(B):
+        print(f"request[{b}] -> {gen[b].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

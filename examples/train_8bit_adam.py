@@ -1,0 +1,59 @@
+"""Figure 10(a) reproduction: 8-bit Adam (block-wise quantized moments)
+loss curve vs fp32 AdamW on the same model/data.
+
+RaggedShard makes this communication-free: the planner aligns every tensor
+start and the shard size to the quant block, so each device quantizes its
+local shard independently (no metadata exchange -- the paper's point).
+
+    PYTHONPATH=src python examples/train_8bit_adam.py
+"""
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.configs import build_model, get_config
+from repro.core.fsdp import FSDPRuntime
+from repro.data.pipeline import DataConfig, SyntheticStream
+from repro.launch.mesh import make_local_mesh
+from repro.optim import make_optimizer
+
+STEPS = 120
+
+
+def run(optname: str):
+    cfg = dataclasses.replace(
+        get_config("gpt-oss-120b").reduced(), optimizer=optname,
+        quant_block=64, learning_rate=1e-3)
+    mesh = make_local_mesh(1, 1)
+    model = build_model(cfg)
+    rt = FSDPRuntime(model, mesh)
+    params = rt.init_params(0)
+    opt = make_optimizer(cfg)
+    state = opt.init(rt)
+    fn = rt.make_train_step(opt)
+    stream = SyntheticStream(DataConfig(cfg.vocab, 64, 8, seed=1), cfg)
+    step = jnp.int32(0)
+    losses = []
+    for i in range(STEPS):
+        b = stream.shard(stream.batch(i), rt)
+        params, state, step, m = fn(params, state, step, b)
+        losses.append(float(m["loss"]))
+    return losses
+
+
+def main():
+    l32 = run("adamw")
+    l8 = run("adam8bit")
+    print(f"{'step':>5s} {'adamw':>8s} {'adam8bit':>9s}")
+    for i in range(0, STEPS, 10):
+        print(f"{i:5d} {l32[i]:8.4f} {l8[i]:9.4f}")
+    print(f"final {l32[-1]:8.4f} {l8[-1]:9.4f}")
+    gap = abs(l8[-1] - l32[-1])
+    print(f"\nfinal-loss gap = {gap:.3f} "
+          f"(paper Fig.10a: curves track closely; occasional spikes are "
+          f"characteristic of reduced-precision states)")
+    assert gap < 0.3, "8-bit Adam diverged from fp32 AdamW"
+
+
+if __name__ == "__main__":
+    main()

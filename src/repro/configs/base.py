@@ -1,0 +1,156 @@
+"""Config system: model architecture + parallelism + run shapes.
+
+Every assigned architecture gets one ``<id>.py`` in this package exporting
+``CONFIG`` (exact paper/model-card numbers, cited) built on these dataclasses.
+``ModelConfig.reduced()`` derives the CPU smoke-test variant (2 layers,
+d_model<=512, <=4 experts) required by the assignment.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelConfig:
+    """How one architecture maps onto the production mesh.
+
+    The paper's primary axis is FSDP (ZeRO-3).  Small/medium models use
+    *pure FSDP* over every non-pod mesh axis (the paper's main mode); very
+    large dense models add TP over ``model``; MoE models add EP over
+    ``model``.  ``pod`` defaults to HSDP replication (paper §6.1 sweeps
+    2x/4x replication); set ``pod_fsdp=True`` to extend ZeRO-3 across pods.
+    """
+
+    fsdp_axes: tuple[str, ...] = ("data", "model")  # param-shard axes
+    batch_axes: tuple[str, ...] = ("data", "model")  # batch-shard axes
+    tp: int = 1           # tensor parallel degree over "model"
+    ep: int = 1           # expert parallel degree over "model"
+    pod_fsdp: bool = False   # multi-pod: extend FSDP over "pod" (else HSDP)
+    sequence_parallel: bool = False  # shard activations over "model" (w/ tp)
+    microbatches: int = 1    # gradient accumulation chunks
+
+    def __post_init__(self):
+        # TP shards activations over "model", so parameters can't also be
+        # ZeRO-sharded over it.  EP is fine: the runtime strips "model" from
+        # the expert groups' FSDP axes (experts are Shard(0) over "model").
+        if self.tp > 1:
+            assert "model" not in self.fsdp_axes
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    arch_type: str  # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0  # 0 -> d_model // n_heads
+
+    # --- attention variants -------------------------------------------------
+    qkv_bias: bool = False                 # qwen1.5/2.5
+    attn_softcap: Optional[float] = None   # gemma2 attn logit softcap
+    final_softcap: Optional[float] = None  # gemma2 final logit softcap
+    sliding_window: Optional[int] = None
+    local_global_alternate: bool = False   # gemma2: alternate local/global
+    post_norms: bool = False               # gemma2 post-attn/post-mlp norms
+
+    # --- mlp ----------------------------------------------------------------
+    mlp: str = "swiglu"  # swiglu | geglu | squared_relu
+
+    # --- moe ----------------------------------------------------------------
+    n_experts: int = 0
+    top_k: int = 0
+    moe_aux_coef: float = 0.01
+    capacity_factor: float = 1.25
+
+    # --- vlm (stub vision frontend: input_specs provides patch embeddings) --
+    cross_attn_interval: int = 0  # every k-th layer is a cross-attn layer
+    n_patches: int = 1024
+
+    # --- audio / enc-dec (stub audio frontend: frame embeddings) ------------
+    encoder_layers: int = 0
+    n_frames: int = 1024
+
+    # --- ssm / hybrid --------------------------------------------------------
+    ssm_state: int = 0
+    conv_kernel: int = 4
+    slstm_every: int = 0        # xlstm: every k-th block is sLSTM
+    ssm_expand: int = 2
+
+    # --- misc ----------------------------------------------------------------
+    attn_chunk: int = 1024  # KV-chunk for online-softmax attention (§Perf)
+    ce_chunk: int = 0       # vocab-chunked CE (0 = materialize logits)
+    rope_theta: float = 1_000_000.0
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    source: str = ""  # citation from the assignment table
+
+    # --- parallel + training defaults ---------------------------------------
+    parallel: ParallelConfig = ParallelConfig()
+    optimizer: str = "adamw"  # adamw | adam8bit | sgd | muon
+    quant_block: int = 1024   # flat elements per quant block (32x32 paper blocks)
+    learning_rate: float = 3e-4
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.encoder_layers > 0
+
+    def reduced(self) -> "ModelConfig":
+        """CPU smoke variant: same family, 2 layers, d_model<=512, <=4 experts."""
+        d = min(self.d_model, 256)
+        heads = max(2, min(self.n_heads, 4))
+        kv = max(1, min(self.n_kv_heads, heads))
+        hd = d // heads
+        return dataclasses.replace(
+            self,
+            n_layers=2,
+            d_model=d,
+            n_heads=heads,
+            n_kv_heads=kv,
+            head_dim=hd,
+            d_ff=min(self.d_ff, 512) if self.d_ff else 0,
+            vocab=min(self.vocab, 512),
+            n_experts=min(self.n_experts, 4) if self.n_experts else 0,
+            top_k=min(self.top_k, 2) if self.top_k else 0,
+            sliding_window=min(self.sliding_window, 16)
+            if self.sliding_window
+            else None,
+            cross_attn_interval=2 if self.cross_attn_interval else 0,
+            n_patches=8,
+            encoder_layers=2 if self.encoder_layers else 0,
+            n_frames=16,
+            ssm_state=min(self.ssm_state, 8) if self.ssm_state else 0,
+            slstm_every=2 if self.slstm_every else 0,
+            parallel=ParallelConfig(
+                fsdp_axes=("data",), batch_axes=("data",), microbatches=1
+            ),
+            quant_block=64,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Input shapes assigned to this paper
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}

@@ -1,0 +1,15 @@
+"""Qwen1.5-32B [hf:Qwen/Qwen1.5-0.5B family scaled per assignment]: 64L,
+d_model=5120, 40H (GQA kv=40 = MHA), d_ff=27392, vocab=152064, QKV bias."""
+from .base import ModelConfig, ParallelConfig
+
+CONFIG = ModelConfig(
+    name="qwen1.5-32b",
+    arch_type="dense",
+    n_layers=64, d_model=5120, n_heads=40, n_kv_heads=40,
+    d_ff=27392, vocab=152064, head_dim=128,
+    qkv_bias=True, mlp="swiglu", rope_theta=1e6,
+    source="[hf:Qwen/Qwen1.5-0.5B]",
+    parallel=ParallelConfig(fsdp_axes=("data", "model"),
+                            batch_axes=("data", "model")),
+    optimizer="adamw",
+)

@@ -1,0 +1,15 @@
+"""Qwen2.5-14B [hf:Qwen/Qwen2.5-0.5B family scaled per assignment]:
+48L, d_model=5120, 40 heads (GQA kv=8), d_ff=13824, vocab=152064, QKV bias."""
+from .base import ModelConfig, ParallelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2.5-14b",
+    arch_type="dense",
+    n_layers=48, d_model=5120, n_heads=40, n_kv_heads=8,
+    d_ff=13824, vocab=152064, head_dim=128,
+    qkv_bias=True, mlp="swiglu", rope_theta=1e6,
+    source="[hf:Qwen/Qwen2.5-0.5B]",
+    parallel=ParallelConfig(fsdp_axes=("data", "model"),
+                            batch_axes=("data", "model")),
+    optimizer="adamw",
+)

@@ -1,0 +1,435 @@
+"""veScale-FSDP runtime: fully_shard-style API over RaggedShard + DBuffer.
+
+``FSDPRuntime`` wraps a model (repro.models.*) for a mesh:
+
+  * each communication group's tensors are localized (outer TP/EP sharding
+    composed per paper §4), planned (Algorithm 1), and backed by a DBuffer
+    whose flat buffer is sharded over the group's FSDP mesh axes;
+  * the train step runs under shard_map.  The layer scan all-gathers one
+    layer's flat buffer (bf16 on the wire), unpacks zero-copy, and computes;
+    ``jax.grad`` transposes the all-gather into a psum-scatter, which IS the
+    ZeRO-3 gradient reduce-scatter.  Remat re-gathers parameters in the
+    backward pass, matching FSDP's backward re-allgather;
+  * HSDP: on the multi-pod mesh the ``pod`` axis replicates parameters and
+    grads are psum'd across pods (paper §6.1); ``pod_fsdp=True`` extends
+    ZeRO-3 over pods instead;
+  * the optimizer update is group-fused over the flat local shard (DBuffer
+    group ops), with buffers donated for in-place semantics.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Callable, Mapping
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models.transformer import GroupDef
+from .dbuffer import DBuffer
+from .planner import PLANNERS, plan_group
+from .ragged import LANE, ShardDim, TensorSpec, compose_granularity
+
+
+# ---------------------------------------------------------------------------
+# group layout resolution
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class GroupLayout:
+    name: str
+    gdef: GroupDef
+    local_specs: tuple[TensorSpec, ...]
+    plan: Any               # GroupPlan
+    buffer: DBuffer
+    fsdp_axes: tuple[str, ...]
+    outer_axis: str | None     # TP/EP axis the buffer is additionally split on
+    outer_size: int
+    n_layers: int | None
+
+    @property
+    def sharded_dim(self) -> int:
+        return self.outer_size * self.plan.total
+
+    def global_shape(self) -> tuple[int, ...]:
+        d = (self.sharded_dim,)
+        return (self.n_layers,) + d if self.n_layers else d
+
+    def pspec(self) -> P:
+        axes = ((self.outer_axis,) if self.outer_axis else ()) + self.fsdp_axes
+        entry = axes if len(axes) > 1 else axes[0]
+        return P(None, entry) if self.n_layers else P(entry)
+
+
+class FSDPRuntime:
+    def __init__(self, model, mesh: Mesh, *, planner: str = "ragged",
+                 compute_dtype=jnp.bfloat16, donate: bool = True,
+                 scan_unroll: int = 1):
+        self.model = model
+        self.cfg = model.cfg
+        self.mesh = mesh
+        self.planner_mode = planner
+        self.compute_dtype = compute_dtype
+        self.donate = donate
+        self.scan_unroll = scan_unroll  # cost-calibration dry runs unroll
+
+        par = self.cfg.parallel
+        axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        self.has_pod = "pod" in axis_sizes
+        self.tp = par.tp
+        self.ep = par.ep
+        self.tp_axis = "model" if par.tp > 1 else None
+        self.ep_axis = "model" if par.ep > 1 else None
+
+        self.layouts: dict[str, GroupLayout] = {}
+        for name, gdef in model.groups().items():
+            self.layouts[name] = self._layout(name, gdef, axis_sizes)
+
+        self.batch_axes = tuple(
+            a for a in (("pod",) if self.has_pod else ()) + par.batch_axes
+            if a in axis_sizes
+        )
+        self.batch_size_divisor = int(
+            np.prod([axis_sizes[a] for a in self.batch_axes])
+        )
+
+    # ------------------------------------------------------------------ #
+    def _layout(self, name: str, gdef: GroupDef, axis_sizes) -> GroupLayout:
+        par = self.cfg.parallel
+        outer_axis, outer_size = None, 1
+        local_specs = []
+        for s in gdef.specs:
+            sd = gdef.outer.get(s.name)
+            if sd is not None:
+                outer_axis = sd.axis
+                outer_size = axis_sizes[sd.axis]
+                local_specs.append(compose_granularity(s, sd, outer_size))
+            else:
+                local_specs.append(s)
+        if outer_axis or gdef.replicated_over_model:
+            fsdp_axes = tuple(a for a in par.fsdp_axes if a != "model")
+        else:
+            fsdp_axes = tuple(a for a in par.fsdp_axes if a in axis_sizes)
+        if self.has_pod and par.pod_fsdp:
+            fsdp_axes = ("pod",) + fsdp_axes
+        m = int(np.prod([axis_sizes[a] for a in fsdp_axes])) or 1
+
+        align = (
+            self.cfg.quant_block if self.cfg.optimizer == "adam8bit" else 1
+        )
+        if self.planner_mode == "ragged":
+            plan = plan_group(local_specs, m, g_coll=LANE, align=align)
+        else:
+            plan = PLANNERS[self.planner_mode](local_specs, m)
+        return GroupLayout(
+            name=name, gdef=gdef, local_specs=tuple(local_specs), plan=plan,
+            buffer=DBuffer(plan), fsdp_axes=fsdp_axes, outer_axis=outer_axis,
+            outer_size=outer_size, n_layers=gdef.n_layers,
+        )
+
+    # ------------------------------------------------------------------ #
+    # state construction
+    # ------------------------------------------------------------------ #
+    def param_shapes(self) -> dict[str, jax.ShapeDtypeStruct]:
+        out = {}
+        for name, lo in self.layouts.items():
+            out[name] = jax.ShapeDtypeStruct(
+                lo.global_shape(), jnp.float32,
+                sharding=NamedSharding(self.mesh, lo.pspec()),
+            )
+        return out
+
+    @staticmethod
+    def _init_tensor(spec: TensorSpec, seed: int, layer: int | None):
+        """Deterministic per-tensor init: identical values regardless of how
+        tensors are grouped/sharded (so FSDP == TP == HSDP numerics)."""
+        import zlib
+
+        rng = np.random.default_rng(
+            [seed, zlib.crc32(spec.name.encode()),
+             0 if layer is None else layer + 1]
+        )
+        if len(spec.shape) >= 2:
+            fan_in = spec.shape[0]
+            a = rng.normal(0, 1.0 / math.sqrt(max(fan_in, 1)),
+                           size=spec.shape)
+        elif any(t in spec.name for t in ("ln", "norm", "skip", "scale")):
+            a = np.ones(spec.shape)
+        else:
+            a = np.zeros(spec.shape)
+        return a.astype(np.float32)
+
+    def init_params(self, seed: int = 0) -> dict[str, jax.Array]:
+        """Host-side init (small/reduced models and examples; the dry run
+        never calls this)."""
+        params = {}
+        for name, lo in self.layouts.items():
+            layers = list(range(lo.n_layers)) if lo.n_layers else [None]
+            flats = []
+            for li in layers:
+                packs = []
+                for r in range(lo.outer_size):
+                    arrays = {}
+                    for full_spec in lo.gdef.specs:
+                        a = self._init_tensor(full_spec, seed, li)
+                        sd = lo.gdef.outer.get(full_spec.name)
+                        if sd is not None:
+                            a = np.split(a, lo.outer_size, axis=sd.dim)[r]
+                        arrays[full_spec.name] = a
+                    packs.append(lo.buffer.pack(arrays))
+                flats.append(np.concatenate(packs))
+            arr = np.stack(flats) if lo.n_layers else flats[0]
+            params[name] = jax.device_put(
+                arr, NamedSharding(self.mesh, lo.pspec())
+            )
+        return params
+
+    # ------------------------------------------------------------------ #
+    # the ParamGetter handed to model code inside shard_map
+    # ------------------------------------------------------------------ #
+    def _getter(self, local_bufs: Mapping[str, jax.Array], remat: bool = True):
+        return _ParamGetter(self, local_bufs, remat)
+
+    # specs for shard_map
+    def _param_specs(self) -> dict[str, P]:
+        return {n: lo.pspec() for n, lo in self.layouts.items()}
+
+    def _usable_batch_axes(self, batch: int) -> tuple[str, ...]:
+        """Longest prefix of batch axes that evenly divides ``batch`` --
+        smaller global batches shard over fewer axes and replicate on the
+        rest (e.g. decode_32k batch=128 on a 16x16 mesh -> data only)."""
+        sizes = dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+        usable = []
+        rem = batch
+        for a in self.batch_axes:
+            if rem % sizes[a] == 0 and rem >= sizes[a]:
+                usable.append(a)
+                rem //= sizes[a]
+        return tuple(usable)
+
+    def batch_pspec(self, batch_tree) -> Any:
+        def spec_for(leaf):
+            usable = self._usable_batch_axes(leaf.shape[0]) if leaf.ndim else ()
+            if usable:
+                entry = usable if len(usable) > 1 else usable[0]
+                return P(entry, *([None] * (leaf.ndim - 1)))
+            return P(*([None] * leaf.ndim))
+
+        return jax.tree.map(spec_for, batch_tree)
+
+    # ------------------------------------------------------------------ #
+    # train step
+    # ------------------------------------------------------------------ #
+    def make_train_step(self, optimizer) -> Callable:
+        """optimizer: repro.optim.* object with init(layouts, params) and
+        update(runtime, params, grads, state, step)."""
+        par = self.cfg.parallel
+        pspecs = self._param_specs()
+
+        def step_fn(params, opt_state, step, batch):
+            def sharded(params, opt_state, step, batch):
+                def loss_of(bufs, mb):
+                    pg = self._getter(bufs)
+                    nll, w = self.model.loss(pg, mb)
+                    return nll, w
+
+                # clamp accumulation to a divisor of the local batch (the
+                # multi-pod mesh halves the per-device batch vs single-pod)
+                b_loc = jax.tree.leaves(batch)[0].shape[0]
+                micro = par.microbatches
+                while b_loc % micro:
+                    micro -= 1
+                if micro > 1:
+                    def micro_body(acc, mb):
+                        grads, nll_a, w_a = acc
+                        (nll, w), g = jax.value_and_grad(
+                            loss_of, has_aux=True)(params, mb)
+                        grads = jax.tree.map(jnp.add, grads, g)
+                        return (grads, nll_a + nll, w_a + w), None
+
+                    mbs = jax.tree.map(
+                        lambda t: t.reshape((micro, t.shape[0] // micro)
+                                            + t.shape[1:]), batch)
+                    zero = jax.tree.map(jnp.zeros_like, params)
+                    (grads, nll, w), _ = lax.scan(
+                        micro_body, (zero, 0.0, 0.0), mbs)
+                else:
+                    (nll, w), grads = jax.value_and_grad(
+                        loss_of, has_aux=True)(params, batch)
+
+                # cross-device normalization
+                nll_g = lax.psum(nll, self.batch_axes) if self.batch_axes else nll
+                w_g = lax.psum(w, self.batch_axes) if self.batch_axes else w
+                grads = self._reduce_grads(grads)
+                scale = 1.0 / jnp.maximum(w_g, 1.0)
+                grads = jax.tree.map(lambda g: g * scale, grads)
+                new_params, new_opt = optimizer.update(
+                    self, params, grads, opt_state, step)
+                metrics = {
+                    "loss": nll_g / jnp.maximum(w_g, 1.0),
+                    "tokens": w_g,
+                    "grad_norm": _global_norm(self, grads),
+                }
+                return new_params, new_opt, metrics
+
+            opt_specs = optimizer.pspecs(self)
+            fn = jax.shard_map(
+                sharded, mesh=self.mesh,
+                in_specs=(pspecs, opt_specs, P(), self.batch_pspec(batch)),
+                out_specs=(pspecs, opt_specs,
+                           {"loss": P(), "tokens": P(), "grad_norm": P()}),
+                check_vma=False,
+            )
+            new_params, new_opt, metrics = fn(params, opt_state, step, batch)
+            return new_params, new_opt, step + 1, metrics
+
+        donate = (0, 1) if self.donate else ()
+        return jax.jit(step_fn, donate_argnums=donate)
+
+    def _reduce_grads(self, grads):
+        """Extra reductions beyond the autodiff psum-scatter: replicated
+        groups psum over 'model'; HSDP psums over 'pod'."""
+        out = {}
+        for name, g in grads.items():
+            lo = self.layouts[name]
+            if lo.gdef.replicated_over_model and self.tp > 1:
+                g = lax.psum(g, "model")
+            if self.has_pod and "pod" not in lo.fsdp_axes:
+                g = lax.psum(g, "pod")
+            out[name] = g
+        return out
+
+    # ------------------------------------------------------------------ #
+    # serving steps (ZeRO-3 inference: per-layer gather, sharded at rest)
+    # ------------------------------------------------------------------ #
+    def cache_pspec(self, cache_tree, batch: int) -> Any:
+        """Cache sharding: batch dim (declared by the model via
+        ``cache_batch_dims`` -- size-based guessing collides when
+        n_layers == batch) over the usable batch axes; with TP, KV head dims
+        (== tp) over "model"."""
+        usable = list(self._usable_batch_axes(batch))
+        bdims = self.model.cache_batch_dims()
+
+        def spec_for(leaf, bdim):
+            nd = leaf.ndim
+            entries = [None] * nd
+            if usable and leaf.shape[bdim] == batch:
+                entries[bdim] = (
+                    tuple(usable) if len(usable) > 1 else usable[0])
+            if self.tp > 1 and nd >= 5:
+                # KV leaves: head dim (== tp) sharded over "model"
+                for hdim in range(nd):
+                    if entries[hdim] is None and leaf.shape[hdim] == self.tp:
+                        entries[hdim] = "model"
+                        break
+            return P(*entries)
+
+        return jax.tree.map(spec_for, cache_tree, bdims)
+
+    def make_prefill_step(self):
+        pspecs = self._param_specs()
+
+        def step_fn(params, batch, cache):
+            bsz = batch["tokens"].shape[0]
+            cspec = self.cache_pspec(cache, bsz)
+
+            def sharded(params, batch, cache):
+                pg = self._getter(params, remat=False)
+                return self.model.prefill(pg, batch, cache)
+
+            fn = jax.shard_map(
+                sharded, mesh=self.mesh,
+                in_specs=(pspecs, self.batch_pspec(batch), cspec),
+                out_specs=(self.batch_pspec(
+                    {"tokens": jax.ShapeDtypeStruct((bsz, 1, 1), jnp.float32)}
+                )["tokens"], cspec),
+                check_vma=False,
+            )
+            return fn(params, batch, cache)
+
+        return jax.jit(step_fn)
+
+    def make_decode_step(self):
+        pspecs = self._param_specs()
+
+        def step_fn(params, batch, cache, index):
+            bsz = batch["tokens"].shape[0]
+            cspec = self.cache_pspec(cache, bsz)
+            # scalar position, or per-row (B,) positions sharded with batch
+            idx_spec = (P() if jnp.ndim(index) == 0
+                        else self.batch_pspec({"i": index})["i"])
+
+            def sharded(params, batch, cache, index):
+                pg = self._getter(params, remat=False)
+                return self.model.decode(pg, batch, cache, index)
+
+            fn = jax.shard_map(
+                sharded, mesh=self.mesh,
+                in_specs=(pspecs, self.batch_pspec(batch), cspec, idx_spec),
+                out_specs=(self.batch_pspec(
+                    {"tokens": jax.ShapeDtypeStruct((bsz, 1, 1), jnp.float32)}
+                )["tokens"], cspec),
+                check_vma=False,
+            )
+            return fn(params, batch, cache, index)
+
+        return jax.jit(step_fn, donate_argnums=(2,))
+
+
+def _is_arr(x):
+    return hasattr(x, "shape")
+
+
+def _global_norm(runtime, grads):
+    sq = 0.0
+    for name, g in grads.items():
+        lo = runtime.layouts[name]
+        s = jnp.sum(g.astype(jnp.float32) ** 2)
+        axes = lo.fsdp_axes + ((lo.outer_axis,) if lo.outer_axis else ())
+        s = lax.psum(s, axes) if axes else s
+        sq = sq + s
+    return jnp.sqrt(sq)
+
+
+# ---------------------------------------------------------------------------
+# ParamGetter: gather + zero-copy unpack, layer scan with remat
+# ---------------------------------------------------------------------------
+
+class _ParamGetter:
+    def __init__(self, runtime: FSDPRuntime, bufs, remat: bool):
+        self.rt = runtime
+        self.bufs = bufs
+        self.remat = remat
+        self.tp_axis = runtime.tp_axis
+        self.ep_axis = runtime.ep_axis
+        self.compute_dtype = runtime.compute_dtype
+
+    def _gather_unpack(self, name: str, local: jax.Array):
+        lo = self.rt.layouts[name]
+        x = local.astype(self.rt.compute_dtype)  # bf16 on the wire
+        if lo.fsdp_axes:
+            x = lax.all_gather(x, lo.fsdp_axes, tiled=True)
+        return lo.buffer.unpack(x)
+
+    def globals(self, group: str) -> dict[str, jax.Array]:
+        return self._gather_unpack(group, self.bufs[group])
+
+    def scan(self, groups, body, carry, xs=None):
+        stacks = tuple(self.bufs[g] for g in groups)
+
+        def scan_body(carry, scan_xs):
+            layer_bufs, user_xs = scan_xs
+            p = {}
+            for g, lb in zip(groups, layer_bufs):
+                p.update(self._gather_unpack(g, lb))
+            return body(p, carry, user_xs)
+
+        if self.remat:
+            scan_body = jax.checkpoint(scan_body)
+        n = self.rt.layouts[groups[0]].n_layers
+        return lax.scan(scan_body, carry, (stacks, xs), length=n,
+                        unroll=min(self.rt.scan_unroll, n))

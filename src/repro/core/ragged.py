@@ -1,0 +1,291 @@
+"""RaggedShard: the paper's flexible sharding format, as host-side metadata.
+
+A RaggedShard placement of a tensor ``t`` is described by
+
+  * a *sharding granularity* ``g_t``: the size (in contiguous elements, row-major)
+    of the atomic non-shardable block, and
+  * a *distribution*: which contiguous interval ``[l_t, r_t)`` of a global
+    communication buffer the tensor occupies.  Device ``k`` of ``m`` owns the
+    buffer interval ``[k*S, (k+1)*S)``, so a tensor may contribute *different
+    numbers of blocks* to different devices -- that raggedness is the point.
+
+In JAX the placement is static compile-time metadata: the flat group buffer is
+a real array sharded with ``NamedSharding``/``shard_map`` over the FSDP mesh
+axes, and ``unpack`` lowers to static slices (zero-copy in XLA: fusable,
+aliasable, no interleaved gather like FSDP2's per-parameter layout).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Iterable, Mapping, Sequence
+
+import numpy as np
+
+# TPU lane width: collectives and VMEM tiles like multiples of 128 elements.
+# This plays the role of NCCL's alignment unit (g_coll) in the paper.
+LANE = 128
+
+
+def _prod(xs: Sequence[int]) -> int:
+    out = 1
+    for x in xs:
+        out *= int(x)
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class TensorSpec:
+    """A logical tensor to be ragged-sharded.
+
+    ``granularity`` is g_t: elements per atomic block.  Helpers:
+      * granularity=1            -> element-wise (DeepSpeed/FSDP1-equivalent)
+      * granularity=row_size     -> row-wise ragged
+      * granularity=rows*row_sz  -> block-wise (e.g. 32 rows for 32x32 quant
+                                    blocks over a d-multiple-of-32 matrix)
+    """
+
+    name: str
+    shape: tuple[int, ...]
+    dtype: str = "float32"
+    granularity: int = 1
+
+    def __post_init__(self):
+        object.__setattr__(self, "shape", tuple(int(s) for s in self.shape))
+        if self.granularity < 1:
+            raise ValueError(f"{self.name}: granularity must be >= 1")
+        if self.size % self.granularity != 0:
+            raise ValueError(
+                f"{self.name}: size {self.size} not divisible by granularity "
+                f"{self.granularity}"
+            )
+
+    @property
+    def size(self) -> int:
+        return _prod(self.shape)
+
+    @property
+    def num_blocks(self) -> int:
+        return self.size // self.granularity
+
+    def row_size(self) -> int:
+        return _prod(self.shape[1:]) if len(self.shape) > 1 else 1
+
+
+def row_granularity(shape: Sequence[int], rows: int = 1) -> int:
+    """Granularity of ``rows`` leading-dim rows (the paper's row-wise ragged)."""
+    return rows * (_prod(shape[1:]) if len(shape) > 1 else 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class Placement:
+    """A planned RaggedShard placement: tensor ``spec`` lives at
+    ``[offset, offset+spec.size)`` in the group's global buffer."""
+
+    spec: TensorSpec
+    offset: int
+
+    @property
+    def end(self) -> int:
+        return self.offset + self.spec.size
+
+
+@dataclasses.dataclass(frozen=True)
+class LocalPiece:
+    """The part of one tensor owned by one device.
+
+    ``buf_lo:buf_hi`` index the device's *local* shard (size S);
+    ``tensor_lo`` is where this piece begins inside the flat tensor.
+    Planner guarantees (buf_hi-buf_lo) % granularity == 0 and
+    tensor_lo % granularity == 0 -- i.e. whole blocks only.
+    """
+
+    name: str
+    buf_lo: int
+    buf_hi: int
+    tensor_lo: int
+    granularity: int
+
+    @property
+    def size(self) -> int:
+        return self.buf_hi - self.buf_lo
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupPlan:
+    """Output of the planner for one communication group.
+
+    The global buffer has ``num_shards * shard_size`` elements; device k owns
+    ``[k*S, (k+1)*S)``.  ``placements`` are in buffer order and pairwise
+    disjoint; gaps are padding (between tensors only, never inside one).
+    """
+
+    placements: tuple[Placement, ...]
+    shard_size: int
+    num_shards: int
+    mode: str = "ragged"  # ragged | fsdp2 | megatron | naive
+
+    # ---- sizes -----------------------------------------------------------
+    @property
+    def total(self) -> int:
+        return self.shard_size * self.num_shards
+
+    @property
+    def payload(self) -> int:
+        return sum(p.spec.size for p in self.placements)
+
+    @property
+    def padding(self) -> int:
+        return self.total - self.payload
+
+    @property
+    def padding_ratio(self) -> float:
+        return self.padding / max(self.payload, 1)
+
+    def __post_init__(self):
+        object.__setattr__(self, "placements", tuple(self.placements))
+
+    # ---- lookups ---------------------------------------------------------
+    def placement(self, name: str) -> Placement:
+        for p in self.placements:
+            if p.spec.name == name:
+                return p
+        raise KeyError(name)
+
+    @property
+    def names(self) -> tuple[str, ...]:
+        return tuple(p.spec.name for p in self.placements)
+
+    # ---- validation (the paper's three constraints) ----------------------
+    def validate(self) -> None:
+        S, m = self.shard_size, self.num_shards
+        prev_end = 0
+        for p in sorted(self.placements, key=lambda p: p.offset):
+            if p.offset < prev_end:
+                raise ValueError(f"{p.spec.name}: overlaps previous tensor")
+            prev_end = p.end
+            if p.end > m * S:
+                raise ValueError(f"{p.spec.name}: exceeds global buffer")
+            if self.mode != "ragged":
+                continue  # baselines intentionally violate block constraints
+            g = p.spec.granularity
+            # every shard boundary strictly inside the tensor must be
+            # block-aligned relative to the tensor start
+            k0 = p.offset // S + 1
+            k1 = (p.end - 1) // S
+            for k in range(k0, k1 + 1):
+                if (k * S - p.offset) % g != 0:
+                    raise ValueError(
+                        f"{p.spec.name}: shard boundary {k}*{S} splits a "
+                        f"block (granularity {g})"
+                    )
+
+    # ---- per-device ragged layout ----------------------------------------
+    def local_layout(self, device: int) -> tuple[LocalPiece, ...]:
+        """Which (whole-block) pieces of which tensors live on ``device``."""
+        S = self.shard_size
+        lo, hi = device * S, (device + 1) * S
+        pieces = []
+        for p in self.placements:
+            a, b = max(p.offset, lo), min(p.end, hi)
+            if a >= b:
+                continue
+            pieces.append(
+                LocalPiece(
+                    name=p.spec.name,
+                    buf_lo=a - lo,
+                    buf_hi=b - lo,
+                    tensor_lo=a - p.offset,
+                    granularity=p.spec.granularity,
+                )
+            )
+        return tuple(pieces)
+
+    def blocks_per_device(self) -> list[dict[str, int]]:
+        """#blocks of each tensor per device -- the ragged distribution."""
+        out = []
+        for k in range(self.num_shards):
+            counts = {}
+            for piece in self.local_layout(k):
+                counts[piece.name] = piece.size // piece.granularity
+            out.append(counts)
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Composition with evenly-sharded DTensor placements (paper Fig. 5)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShardDim:
+    """An (outer) even sharding along one tensor dim over a mesh axis —
+    the TP/EP placements RaggedShard composes with."""
+
+    dim: int
+    axis: str  # mesh axis name, e.g. "model"
+
+
+def compose_granularity(spec: TensorSpec, outer: ShardDim | None,
+                        axis_size: int) -> TensorSpec:
+    """Adapt a TensorSpec for FSDP packing *after* an outer Shard(dim).
+
+    Per the paper (§4): EP/TP is applied before FSDP, so the planner packs the
+    TP/EP-*local* tensor.  For Shard(dim>0) the ragged granularity must never
+    cut into that dim, so it becomes LCM(user granularity, stride of dim).
+    For Shard(0) — StridedRaggedShard — the local tensor is a contiguous row
+    range, so granularity passes through unchanged (the reshuffle metadata is
+    carried by `StridedRagged` below).
+    """
+    if outer is None:
+        return spec
+    shape = list(spec.shape)
+    if shape[outer.dim] % axis_size != 0:
+        raise ValueError(
+            f"{spec.name}: dim {outer.dim} (={shape[outer.dim]}) not divisible "
+            f"by axis size {axis_size}"
+        )
+    shape[outer.dim] //= axis_size
+    g = spec.granularity
+    if outer.dim > 0:
+        stride = _prod(shape[outer.dim:])  # local stride below the cut dim
+        g = math.lcm(g, stride)
+        g = min(g, _prod(shape))
+        if _prod(shape) % g:
+            g = stride  # fall back to dim-stride granularity
+    return TensorSpec(spec.name, tuple(shape), spec.dtype, g)
+
+
+@dataclasses.dataclass(frozen=True)
+class StridedRagged:
+    """Metadata for (RaggedShard, Shard(0)) composition.
+
+    The logical tensor's dim-0 is first split over ``outer_axis`` (size n);
+    each local part is then ragged-packed over the FSDP axis.  Materializing
+    the full tensor therefore needs an all-gather over *both* axes plus a
+    reorder: gathered layout is [outer0: rows 0..r, outer1: rows r..2r, ...]
+    which is already the logical row order — the 'stride' bookkeeping is that
+    offsets in the group buffer are per-outer-shard, not global.
+    """
+
+    name: str
+    full_shape: tuple[int, ...]
+    outer_axis: str
+    outer_size: int
+
+
+def checkpoint_index(plan: GroupPlan) -> dict:
+    """A DCP-style index: name -> (shape, dtype, granularity, offset).
+
+    RaggedShard inherits DTensor-based checkpointing (paper §4): this index
+    plus the per-device local shard is enough to save/load without any
+    communication (see repro.checkpoint.ckpt).
+    """
+    return {
+        p.spec.name: dict(
+            shape=list(p.spec.shape),
+            dtype=p.spec.dtype,
+            granularity=p.spec.granularity,
+            offset=p.offset,
+        )
+        for p in plan.placements
+    }

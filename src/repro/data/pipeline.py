@@ -1,0 +1,72 @@
+"""Deterministic synthetic token pipeline.
+
+Production-shaped: an infinite, seekable stream of fixed-length sequences,
+sharded by host, with per-step determinism (step -> batch is a pure
+function, so restarts resume exactly -- matching the checkpointing story).
+
+The "corpus" is a procedurally generated Zipf-ish token distribution with
+Markov structure, so cross-entropy has learnable signal (examples train
+against it and the loss visibly drops, e.g. Figure 10 reproductions).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    # Markov structure: tok_{t+1} ~ mix(unigram-zipf, f(tok_t))
+    order_mix: float = 0.7
+
+
+class SyntheticStream:
+    def __init__(self, cfg: DataConfig, model_cfg=None):
+        self.cfg = cfg
+        self.model_cfg = model_cfg
+        rng = np.random.default_rng(cfg.seed)
+        v = cfg.vocab
+        ranks = np.arange(1, v + 1, dtype=np.float64)
+        self.unigram = (1.0 / ranks) / np.sum(1.0 / ranks)
+        # deterministic "successor" structure: next ~ (a*tok + b) % v band
+        self.a = int(rng.integers(3, 97)) * 2 + 1
+        self.b = int(rng.integers(0, v))
+
+    def batch(self, step: int) -> dict[str, jnp.ndarray]:
+        cfg = self.cfg
+        rng = np.random.default_rng([cfg.seed, step])
+        B, T, v = cfg.global_batch, cfg.seq_len, cfg.vocab
+        toks = np.empty((B, T), np.int64)
+        toks[:, 0] = rng.choice(v, size=B, p=self.unigram)
+        mix = rng.random((B, T)) < cfg.order_mix
+        iid = rng.choice(v, size=(B, T), p=self.unigram)
+        for t in range(1, T):
+            succ = (self.a * toks[:, t - 1] + self.b) % v
+            toks[:, t] = np.where(mix[:, t], succ, iid[:, t])
+        out = {"tokens": jnp.asarray(toks, jnp.int32)}
+        mc = self.model_cfg
+        if mc is not None and mc.arch_type == "vlm":
+            out["patches"] = jnp.asarray(
+                rng.normal(0, 1, (B, mc.n_patches, mc.d_model)), jnp.bfloat16)
+        if mc is not None and mc.arch_type == "audio":
+            out["frames"] = jnp.asarray(
+                rng.normal(0, 1, (B, min(mc.n_frames, T), mc.d_model)),
+                jnp.bfloat16)
+        return out
+
+    def shard(self, batch, runtime):
+        """Place a host batch onto the mesh with the runtime's batch specs."""
+        from jax.sharding import NamedSharding
+
+        specs = runtime.batch_pspec(batch)
+        return {
+            k: jax.device_put(v, NamedSharding(runtime.mesh, specs[k]))
+            for k, v in batch.items()
+        }

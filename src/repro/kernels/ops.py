@@ -1,0 +1,36 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels execute in ``interpret=True`` mode --
+the kernel body runs as traced jnp on the host, which is how we validate
+them against ref.py.  On a real TPU backend they compile to Mosaic.
+"""
+from __future__ import annotations
+
+import jax
+
+from .adam8bit_update import adam8bit_update as _adam8
+from .adam_update import adamw_update as _adamw
+from .blockwise_quant import dequantize as _deq, quantize as _q
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def quantize(x, block: int = 1024):
+    return _q(x, block=block, interpret=_interpret())
+
+
+def dequantize(codes, scales, block: int = 1024):
+    return _deq(codes, scales, block=block, interpret=_interpret())
+
+
+def adamw_update(w, g, m, v, mask, *, lr, b1, b2, eps, wd, c1, c2):
+    return _adamw(w, g, m, v, mask, lr, b1, b2, eps, wd, c1, c2,
+                  interpret=_interpret())
+
+
+def adam8bit_update(w, g, m8, v8, ms, vs, mask, *, lr, b1, b2, eps, wd,
+                    c1, c2, block: int = 1024):
+    return _adam8(w, g, m8, v8, ms, vs, mask, lr, b1, b2, eps, wd, c1, c2,
+                  block=block, interpret=_interpret())

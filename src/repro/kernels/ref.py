@@ -1,0 +1,37 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..quant.blockwise import (
+    dequantize_blockwise, dequantize_blockwise_log, quantize_blockwise,
+    quantize_blockwise_log,
+)
+
+
+def quantize_ref(x, block: int):
+    return quantize_blockwise(x, block)
+
+
+def dequantize_ref(codes, scales, block: int):
+    return dequantize_blockwise(codes, scales, block)
+
+
+def adamw_update_ref(w, g, m, v, mask, lr, b1, b2, eps, wd, c1, c2):
+    g = g.astype(jnp.float32)
+    m2 = b1 * m + (1 - b1) * g
+    v2 = b2 * v + (1 - b2) * g * g
+    upd = (m2 / c1) / (jnp.sqrt(v2 / c2) + eps)
+    w2 = w - lr * (upd + wd * mask * w)
+    return w2, m2, v2
+
+
+def adam8bit_update_ref(w, g, m8, v8, ms, vs, mask, lr, b1, b2, eps, wd,
+                        c1, c2, block: int):
+    m = dequantize_blockwise(m8, ms, block)
+    v = dequantize_blockwise_log(v8, vs, block)
+    w2, m2, v2 = adamw_update_ref(w, g, m, v, mask, lr, b1, b2, eps, wd,
+                                  c1, c2)
+    m8o, mso = quantize_blockwise(m2, block)
+    v8o, vso = quantize_blockwise_log(v2, block)
+    return w2, m8o, v8o, mso, vso

@@ -1,0 +1,261 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry run: prove the distribution config is coherent + extract
+roofline terms from the compiled artifacts.
+
+For every (architecture x input shape) pair, lower + compile the step on the
+production mesh (single-pod 16x16 = 256 chips; --multi-pod 2x16x16 = 512),
+print ``memory_analysis()`` / ``cost_analysis()``, and append a JSON row.
+
+Scan-trip calibration: XLA cost_analysis counts a while-loop body ONCE, so a
+rolled layer scan under-reports by ~n_layers.  We therefore compile, per
+scanned stack, one extra variant with 2 blocks fully unrolled; the cost
+difference is exactly one layer's cost, and
+
+    true = cost(full) + sum_s (L_s - 1) * body_s          (microbatches=1)
+
+For gradient accumulation (micro>1) the optimizer's one-shot cost is
+estimated analytically and the inner fwd/bwd scaled by micro (documented in
+EXPERIMENTS.md §Dry-run).
+
+Usage:
+    python -m repro.launch.dryrun --arch qwen2.5-14b --shape train_4k
+    python -m repro.launch.dryrun --all [--multi-pod] [--planner ragged]
+"""
+import argparse
+import dataclasses
+import json
+import pathlib
+import time
+import traceback
+
+RESULTS = pathlib.Path(__file__).resolve().parents[3] / "results"
+
+_STATE_BYTES = {"adamw": 8, "sgd": 4, "adam8bit": 2.01, "muon": 12}
+
+
+def _stacks(cfg) -> dict[str, int]:
+    """scan-stack name -> true block count for this config."""
+    if cfg.arch_type == "audio":
+        return {"enc": cfg.encoder_layers, "dec": cfg.n_layers}
+    if cfg.arch_type == "vlm":
+        return {"layers": cfg.n_layers // cfg.cross_attn_interval}
+    if cfg.arch_type == "ssm":
+        k = cfg.slstm_every or cfg.n_layers
+        return {"layers": cfg.n_layers // k}
+    return {"layers": cfg.n_layers}
+
+
+def _with_blocks(cfg, blocks: dict[str, int]):
+    """Return cfg whose stacks scan ``blocks[s]`` times."""
+    if cfg.arch_type == "audio":
+        return dataclasses.replace(
+            cfg, encoder_layers=blocks["enc"], n_layers=blocks["dec"])
+    if cfg.arch_type == "vlm":
+        return dataclasses.replace(
+            cfg, n_layers=blocks["layers"] * cfg.cross_attn_interval)
+    if cfg.arch_type == "ssm":
+        k = cfg.slstm_every or cfg.n_layers
+        return dataclasses.replace(cfg, n_layers=blocks["layers"] * k)
+    return dataclasses.replace(cfg, n_layers=blocks["layers"])
+
+
+def _compile(cfg, shape, mesh, planner, unroll=1):
+    from ..configs import build_model
+    from ..core.fsdp import FSDPRuntime
+    from ..optim import make_optimizer
+    from .specs import input_specs
+
+    model = build_model(cfg)
+    runtime = FSDPRuntime(model, mesh, planner=planner, scan_unroll=unroll)
+    optimizer = make_optimizer(cfg)
+    if shape.kind == "train":
+        step = runtime.make_train_step(optimizer)
+        args = input_specs(cfg, shape, runtime, model, optimizer)
+    elif shape.kind == "prefill":
+        step = runtime.make_prefill_step()
+        args = input_specs(cfg, shape, runtime, model)
+    else:
+        step = runtime.make_decode_step()
+        args = input_specs(cfg, shape, runtime, model)
+    compiled = step.lower(*args).compile()
+    return compiled, runtime
+
+
+def _costs(compiled):
+    from .roofline import parse_collectives
+
+    ca = compiled.cost_analysis() or {}
+    st = parse_collectives(compiled.as_text())
+    return (float(ca.get("flops", 0.0)),
+            float(ca.get("bytes accessed", 0.0)),
+            st.total_bytes, st.counts)
+
+
+def _optimizer_cost(runtime, cfg):
+    """Analytic one-shot optimizer cost per device (flops, bytes)."""
+    import numpy as np
+
+    local = 0
+    for lo in runtime.layouts.values():
+        n = lo.plan.shard_size * (lo.n_layers or 1)
+        local += n
+    state = _STATE_BYTES.get(cfg.optimizer, 8)
+    # read w, g, states; write w, states (fp32 master + state bytes)
+    return 12.0 * local, local * (4 * 3 + 2 * state)
+
+
+def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+            planner: str = "ragged", quiet: bool = False,
+            calibrate: bool = True, overrides: dict | None = None):
+    from ..configs import get_config, supports_shape
+    from ..configs.base import SHAPES
+    from .mesh import make_production_mesh
+    from .roofline import Roofline, model_flops
+
+    cfg = get_config(arch)
+    if overrides:
+        par = dataclasses.replace(cfg.parallel,
+                                  **overrides.get("parallel", {}))
+        cfg = dataclasses.replace(
+            cfg, parallel=par,
+            **{k: v for k, v in overrides.items() if k != "parallel"})
+    shape = SHAPES[shape_name]
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    chips = 512 if multi_pod else 256
+
+    ok, why = supports_shape(cfg, shape)
+    if not ok:
+        return Roofline(arch=arch, shape=shape_name, mesh=mesh_name,
+                        chips=chips, compile_ok=False, note=f"SKIP: {why}")
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+
+    t0 = time.time()
+    compiled, runtime = _compile(cfg, shape, mesh, planner)
+    t_full = time.time() - t0
+    mem = compiled.memory_analysis()
+    if not quiet:
+        print(mem)
+        ca = compiled.cost_analysis() or {}
+        print({k: v for k, v in ca.items() if k in ("flops", "bytes accessed")})
+
+    f_full, b_full, c_full, counts = _costs(compiled)
+    # effective accumulation = what the runtime actually ran after clamping
+    # to a divisor of the per-device batch
+    if shape.kind == "train":
+        import numpy as np
+
+        sizes = dict(zip(runtime.mesh.axis_names,
+                         runtime.mesh.devices.shape))
+        div = int(np.prod([
+            sizes[a]
+            for a in runtime._usable_batch_axes(shape.global_batch)
+        ])) or 1
+        b_loc = max(shape.global_batch // div, 1)
+        micro = cfg.parallel.microbatches
+        while b_loc % micro:
+            micro -= 1
+    else:
+        micro = 1
+    stacks = _stacks(cfg)
+
+    if calibrate:
+        base_blocks = {s: 1 for s in stacks}
+        cal_cfg = _with_blocks(cfg, base_blocks)
+        cbase, _ = _compile(cal_cfg, shape, mesh, planner, unroll=1)
+        f_b, b_b, c_b, _ = _costs(cbase)
+        bodies = {}
+        for s in stacks:
+            blocks = dict(base_blocks)
+            blocks[s] = 2
+            cvar, _ = _compile(_with_blocks(cfg, blocks), shape, mesh,
+                               planner, unroll=2)
+            f_v, b_v, c_v, _ = _costs(cvar)
+            bodies[s] = (f_v - f_b, b_v - b_b, c_v - c_b)
+        o_f, o_b = (_optimizer_cost(runtime, cfg)
+                    if shape.kind == "train" else (0.0, 0.0))
+        inner_f = max(f_full - o_f, 0.0)
+        inner_b = max(b_full - o_b, 0.0)
+        f_true = o_f + micro * (inner_f + sum(
+            (stacks[s] - 1) * max(bodies[s][0], 0) for s in stacks))
+        b_true = o_b + micro * (inner_b + sum(
+            (stacks[s] - 1) * max(bodies[s][1], 0) for s in stacks))
+        c_true = micro * (c_full + sum(
+            (stacks[s] - 1) * max(bodies[s][2], 0) for s in stacks))
+    else:
+        f_true, b_true, c_true = f_full, b_full, c_full
+
+    r = Roofline(
+        arch=arch, shape=shape_name, mesh=mesh_name, chips=chips,
+        compile_ok=True,
+        flops_per_device=f_true, bytes_per_device=b_true,
+        collective_bytes=c_true,
+        temp_bytes=float(getattr(mem, "temp_size_in_bytes", 0)),
+        arg_bytes=float(getattr(mem, "argument_size_in_bytes", 0)),
+        coll_counts=counts,
+        model_flops=model_flops(cfg, shape),
+        note=(why + f" full_compile={t_full:.0f}s").strip(),
+    )
+    return r
+
+
+def append_result(row: dict, path: pathlib.Path):
+    path.parent.mkdir(parents=True, exist_ok=True)
+    with open(path, "a") as f:
+        f.write(json.dumps(row) + "\n")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--planner", default="ragged")
+    ap.add_argument("--no-calibrate", action="store_true")
+    ap.add_argument("--optimized", action="store_true",
+                    help="apply the beyond-paper §Perf winners "
+                         "(attn_chunk=512, ce_chunk=8192, capacity 1.0)")
+    ap.add_argument("--out", default=str(RESULTS / "dryrun.jsonl"))
+    args = ap.parse_args()
+
+    from ..configs import ASSIGNED_ARCH_IDS
+    from ..configs.base import SHAPES
+
+    pairs = (
+        [(a, s) for a in ASSIGNED_ARCH_IDS for s in SHAPES]
+        if args.all
+        else [(args.arch, args.shape)]
+    )
+    out = pathlib.Path(args.out)
+    # beyond-paper optimized profile (EXPERIMENTS.md §Perf): smaller online-
+    # softmax tiles, vocab-chunked CE, tight MoE capacity, tuned microbatches
+    OPTIMIZED = {"attn_chunk": 512, "ce_chunk": 8192,
+                 "capacity_factor": 1.0}
+    OPTIMIZED_PARALLEL = {"nemotron-4-340b": {"microbatches": 4}}
+    for arch, shape in pairs:
+        try:
+            ov = None
+            if args.optimized:
+                ov = dict(OPTIMIZED)
+                if arch in OPTIMIZED_PARALLEL:
+                    ov["parallel"] = OPTIMIZED_PARALLEL[arch]
+            r = run_one(arch, shape, multi_pod=args.multi_pod,
+                        planner=args.planner,
+                        calibrate=not args.no_calibrate, overrides=ov)
+            row = r.row()
+        except Exception as e:
+            traceback.print_exc()
+            row = {"arch": arch, "shape": shape,
+                   "mesh": "pod2x16x16" if args.multi_pod else "pod16x16",
+                   "ok": False, "note": f"ERROR {type(e).__name__}: {e}"}
+        row["planner"] = args.planner
+        row["profile"] = "optimized" if args.optimized else "baseline"
+        print(json.dumps(row))
+        append_result(row, out)
+
+
+if __name__ == "__main__":
+    main()

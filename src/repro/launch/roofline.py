@@ -1,0 +1,230 @@
+"""Roofline analysis from the compiled dry-run artifact (no hardware).
+
+Three terms per (arch x shape x mesh), in seconds:
+
+    compute    = HLO_FLOPs_per_device / peak_FLOP/s
+    memory     = HLO_bytes_per_device / HBM_bw
+    collective = collective_bytes_per_device / link_bw
+
+HLO FLOPs/bytes come from ``compiled.cost_analysis()`` (per-device for SPMD
+modules).  Collective bytes are parsed from ``compiled.as_text()``: for each
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute we
+take the largest operand/result buffer and apply the standard ring-volume
+factor (m-1)/m (2x for all-reduce).
+
+CPU-backend caveat (recorded in EXPERIMENTS.md): XLA:CPU upcasts some bf16
+collectives to f32; we report bytes as lowered.  MODEL_FLOPS = 6*N*D uses
+N_active for MoE.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+import numpy as np
+
+from .mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|\S+)\s*(all-gather|all-reduce|reduce-scatter|"
+    r"all-to-all|collective-permute)(?:-start)?\("
+)
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|f8e4m3fn|f8e5m2|s64|s32|s16|s8|"
+                       r"u64|u32|u16|u8|pred|c64|c128)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_GROUPS2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(m: re.Match) -> int:
+    dt, dims = m.group(1), m.group(2)
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dt]
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: dict
+    bytes_by_kind: dict
+
+    @property
+    def total_bytes(self) -> float:
+        return sum(self.bytes_by_kind.values())
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    counts: dict[str, int] = {}
+    by_kind: dict[str, float] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(1)
+        shapes = _SHAPE_RE.findall(line)
+        if not shapes:
+            continue
+        sizes = []
+        for dt, dims in shapes:
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            sizes.append(n * _DTYPE_BYTES[dt])
+        buf = max(sizes)
+        # group size
+        g = 1
+        gm = _GROUPS_RE.search(line)
+        if gm:
+            g = len(gm.group(1).split(","))
+        else:
+            gm2 = _GROUPS2_RE.search(line)
+            if gm2:
+                g = int(gm2.group(2))
+        ring = (g - 1) / g if g > 1 else 0.0
+        vol = buf * ring * (2.0 if kind == "all-reduce" else 1.0)
+        counts[kind] = counts.get(kind, 0) + 1
+        by_kind[kind] = by_kind.get(kind, 0.0) + vol
+    return CollectiveStats(counts, by_kind)
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS = 6*N*D (training) with N_active for MoE; 2*N*D for a
+    forward-only step (prefill/decode)."""
+    n_active = active_params(cfg)
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n_active * tokens
+
+
+def active_params(cfg) -> float:
+    """Per-token active parameter count from the config."""
+    D, F, V = cfg.d_model, cfg.d_ff, cfg.vocab
+    hd = cfg.hd
+    attn = D * (cfg.n_heads * hd) * 2 + D * (cfg.n_kv_heads * hd) * 2
+    if cfg.n_experts:
+        glu = 3 if cfg.mlp in ("swiglu", "geglu") else 2
+        ffn = cfg.top_k * glu * D * F + D * cfg.n_experts  # + router
+    else:
+        glu = 3 if cfg.mlp in ("swiglu", "geglu") else 2
+        ffn = glu * D * F
+    if cfg.arch_type == "ssm":
+        # mLSTM projections dominate
+        per_layer = 5 * D * D
+    elif cfg.arch_type == "hybrid":
+        d_in = cfg.n_heads * hd
+        per_layer = attn + ffn + 2 * D * 2 * d_in
+    else:
+        per_layer = attn + ffn
+    n_layers = cfg.n_layers + cfg.encoder_layers
+    if cfg.cross_attn_interval:
+        # cross layers replace every k-th self layer's attention cost-ish
+        pass
+    return per_layer * n_layers + 2 * V * D
+
+
+def total_params(cfg) -> float:
+    D, F, V = cfg.d_model, cfg.d_ff, cfg.vocab
+    hd = cfg.hd
+    attn = D * (cfg.n_heads * hd) * 2 + D * (cfg.n_kv_heads * hd) * 2
+    glu = 3 if cfg.mlp in ("swiglu", "geglu") else 2
+    if cfg.n_experts:
+        ffn = cfg.n_experts * glu * D * F + D * cfg.n_experts
+    else:
+        ffn = glu * D * F
+    if cfg.arch_type == "ssm":
+        per_layer = 5 * D * D
+    elif cfg.arch_type == "hybrid":
+        d_in = cfg.n_heads * hd
+        per_layer = attn + ffn + 2 * D * 2 * d_in
+    else:
+        per_layer = attn + ffn
+    n_layers = cfg.n_layers + cfg.encoder_layers
+    return per_layer * n_layers + 2 * V * D
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    compile_ok: bool
+    flops_per_device: float = 0.0
+    bytes_per_device: float = 0.0
+    collective_bytes: float = 0.0
+    temp_bytes: float = 0.0
+    arg_bytes: float = 0.0
+    coll_counts: dict = dataclasses.field(default_factory=dict)
+    model_flops: float = 0.0
+    error: str = ""
+    note: str = ""
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS_BF16
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_device / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_ratio(self) -> float:
+        total = self.flops_per_device * self.chips
+        return self.model_flops / total if total else 0.0
+
+    def row(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "ok": self.compile_ok,
+            "t_compute_s": round(self.t_compute, 6),
+            "t_memory_s": round(self.t_memory, 6),
+            "t_collective_s": round(self.t_collective, 6),
+            "dominant": self.dominant if self.compile_ok else "-",
+            "hlo_gflops_dev": round(self.flops_per_device / 1e9, 3),
+            "hbm_gb_dev": round(self.bytes_per_device / 1e9, 3),
+            "coll_gb_dev": round(self.collective_bytes / 1e9, 4),
+            "temp_gb_dev": round(self.temp_bytes / 1e9, 3),
+            "arg_gb_dev": round(self.arg_bytes / 1e9, 3),
+            "model_gflops": round(self.model_flops / 1e9, 1),
+            "useful_ratio": round(self.useful_ratio, 4),
+            "colls": self.coll_counts,
+            "note": self.note or self.error[:200],
+        }
+
+
+def analyze(compiled, *, arch, shape_cfg, mesh_name, chips, cfg,
+            note="") -> Roofline:
+    cost = compiled.cost_analysis() or {}
+    mem = compiled.memory_analysis()
+    stats = parse_collectives(compiled.as_text())
+    return Roofline(
+        arch=arch, shape=shape_cfg.name, mesh=mesh_name, chips=chips,
+        compile_ok=True,
+        flops_per_device=float(cost.get("flops", 0.0)),
+        bytes_per_device=float(cost.get("bytes accessed", 0.0)),
+        collective_bytes=stats.total_bytes,
+        temp_bytes=float(getattr(mem, "temp_size_in_bytes", 0)),
+        arg_bytes=float(getattr(mem, "argument_size_in_bytes", 0)),
+        coll_counts=stats.counts,
+        model_flops=model_flops(cfg, shape_cfg),
+        note=note,
+    )

@@ -1,0 +1,80 @@
+"""Batched serving driver: prefill a batch of prompts, then decode tokens
+with ZeRO-3 parameter gathering per layer (params stay sharded at rest).
+
+    PYTHONPATH=src python -m repro.launch.serve --arch gemma2-2b --reduced \
+        --batch 4 --prompt-len 32 --gen 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma2-2b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--data", type=int, default=1)
+    ap.add_argument("--model", type=int, default=1)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from ..configs import build_model, get_config
+    from ..core.fsdp import FSDPRuntime
+    from .mesh import make_local_mesh
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    mesh = make_local_mesh(args.data, args.model)
+    model = build_model(cfg)
+    runtime = FSDPRuntime(model, mesh)
+    params = runtime.init_params(args.seed)
+    prefill = runtime.make_prefill_step()
+    decode = runtime.make_decode_step()
+
+    rng = np.random.default_rng(args.seed)
+    B, P = args.batch, args.prompt_len
+    total = P + args.gen
+    batch = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab, (B, P)), jnp.int32)}
+    if cfg.arch_type == "vlm":
+        batch["patches"] = jnp.asarray(
+            rng.normal(size=(B, cfg.n_patches, cfg.d_model)), jnp.bfloat16)
+    if cfg.arch_type == "audio":
+        batch["frames"] = jnp.asarray(
+            rng.normal(size=(B, cfg.n_frames, cfg.d_model)), jnp.bfloat16)
+
+    cache = model.init_cache(B, total)
+    t0 = time.time()
+    logits, cache = prefill(params, batch, cache)
+    nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+    print(f"prefill {B}x{P} in {time.time()-t0:.2f}s")
+
+    out_tokens = [np.asarray(nxt)]
+    t0 = time.time()
+    for i in range(args.gen - 1):
+        db = dict(batch)
+        db["tokens"] = nxt[:, None]
+        logits, cache = decode(params, db, cache, jnp.int32(P + i))
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        out_tokens.append(np.asarray(nxt))
+    dt = time.time() - t0
+    gen = np.stack(out_tokens, 1)
+    print(f"decoded {args.gen-1} steps x batch {B} in {dt:.2f}s "
+          f"({B*(args.gen-1)/max(dt,1e-9):.1f} tok/s)")
+    print("sample continuations:")
+    for b in range(min(B, 4)):
+        print(f"  [{b}]", gen[b].tolist())
+
+
+if __name__ == "__main__":
+    main()

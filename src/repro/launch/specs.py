@@ -1,0 +1,64 @@
+"""ShapeDtypeStruct stand-ins for every model input: weak-type-correct,
+shardable, zero allocation.  This is what the dry run lowers against."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+
+from ..configs.base import ModelConfig, ShapeConfig
+
+
+def _sds(shape, dtype, mesh, pspec):
+    return jax.ShapeDtypeStruct(
+        shape, dtype, sharding=NamedSharding(mesh, pspec))
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, runtime):
+    """Input batch ShapeDtypeStructs for one (arch, shape) pair."""
+    mesh = runtime.mesh
+    B = shape.global_batch
+    T = shape.seq_len if shape.kind != "decode" else 1
+    batch = {"tokens": jax.ShapeDtypeStruct((B, T), jnp.int32)}
+    if cfg.arch_type == "vlm":
+        batch["patches"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_patches, cfg.d_model), jnp.bfloat16)
+    if cfg.arch_type == "audio":
+        batch["frames"] = jax.ShapeDtypeStruct(
+            (B, min(cfg.n_frames, shape.seq_len), cfg.d_model), jnp.bfloat16)
+    pspecs = runtime.batch_pspec(batch)
+    return {
+        k: _sds(v.shape, v.dtype, mesh, pspecs[k]) for k, v in batch.items()
+    }
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig, runtime, model):
+    mesh = runtime.mesh
+    shapes = model.cache_shapes(shape.global_batch, shape.seq_len)
+    proto = jax.tree.map(
+        lambda sd: jax.ShapeDtypeStruct(sd[0], sd[1]), shapes,
+        is_leaf=lambda x: isinstance(x, tuple) and isinstance(x[0], tuple),
+    )
+    pspecs = runtime.cache_pspec(proto, shape.global_batch)
+    return jax.tree.map(
+        lambda sd, ps: _sds(sd.shape, sd.dtype, mesh, ps), proto, pspecs)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, runtime, model,
+                optimizer=None):
+    """All lowering inputs for the step implied by ``shape.kind``.
+
+    train   -> (params, opt_state, step, batch)
+    prefill -> (params, batch, cache)
+    decode  -> (params, batch, cache, index)
+    """
+    params = runtime.param_shapes()
+    if shape.kind == "train":
+        return (params, optimizer.state_shapes(runtime),
+                jax.ShapeDtypeStruct((), jnp.int32),
+                batch_specs(cfg, shape, runtime))
+    cache = cache_specs(cfg, shape, runtime, model)
+    if shape.kind == "prefill":
+        return (params, batch_specs(cfg, shape, runtime), cache)
+    return (params, batch_specs(cfg, shape, runtime), cache,
+            jax.ShapeDtypeStruct((), jnp.int32))

@@ -1,0 +1,113 @@
+"""Mixture-of-Experts FFN with top-k routing and expert parallelism.
+
+GShard-style capacity dispatch [Lepikhin et al. 2020] adapted to shard_map:
+tokens are ranked within their expert via a sort-based position count (no
+(N*k, E, C) one-hot tensors), scattered into an (E, C, D) buffer, exchanged
+over the EP mesh axis with two all_to_alls, and combined with router weights.
+
+Composition with the paper (Fig. 5): expert weights are Shard(0) on the
+expert dim over the EP axis, *then* RaggedShard-packed over the FSDP axes —
+the (RaggedShard, Shard(0)) = StridedRaggedShard case.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .layers import psum
+
+
+def _positions_within_expert(flat_e, n_experts):
+    """rank of each assignment among same-expert assignments (stable)."""
+    m = flat_e.shape[0]
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    idx = jnp.arange(m, dtype=jnp.int32)
+    is_start = jnp.concatenate(
+        [jnp.ones((1,), bool), sorted_e[1:] != sorted_e[:-1]]
+    )
+    run_start = jax.lax.associative_scan(
+        jnp.maximum, jnp.where(is_start, idx, 0)
+    )
+    rank_sorted = idx - run_start
+    rank = jnp.zeros((m,), jnp.int32).at[order].set(rank_sorted)
+    return rank
+
+
+def moe_ffn(cfg, p, x, *, ep_axis=None, ep=1, prefix="moe_"):
+    """x: (B, T, D) local tokens.  Returns (out, aux_loss).
+
+    p[f"{prefix}router"]: (D, E) replicated over EP.
+    p[f"{prefix}w1"/"w2"/"w3"]: (E_local, D, F) / (E_local, F, D) / (E_local, D, F).
+    """
+    B, T, D = x.shape
+    N = B * T
+    E = cfg.n_experts
+    k = cfg.top_k
+    e_loc = E // ep
+
+    xf = x.reshape(N, D)
+    logits = (xf @ p[prefix + "router"].astype(x.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = lax.top_k(probs, k)  # (N, k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance aux loss (Switch-style): E * sum_e f_e * P_e
+    me = probs.mean(axis=0)
+    ce = jnp.zeros((E,), jnp.float32).at[top_e.reshape(-1)].add(1.0) / (N * k)
+    aux = E * jnp.sum(me * ce) * cfg.moe_aux_coef
+
+    cap = max(1, int(cfg.capacity_factor * N * k / E))
+    if T == 1:
+        # decode: the per-expert buffer is tiny (N = batch), so run dropless
+        # -- capacity-dropping at decode would make generation depend on
+        # which other requests share the batch (and diverge from prefill)
+        cap = max(cap, N)
+    flat_e = top_e.reshape(-1)                    # (N*k,)
+    flat_w = top_p.reshape(-1).astype(x.dtype)
+    flat_tok = jnp.repeat(jnp.arange(N, dtype=jnp.int32), k)
+    rank = _positions_within_expert(flat_e, E)
+    keep = rank < cap
+    slot = flat_e * cap + jnp.minimum(rank, cap - 1)  # (N*k,)
+
+    # dispatch: (E*cap, D)
+    contrib = jnp.where(keep[:, None], xf[flat_tok], 0).astype(x.dtype)
+    buf = jnp.zeros((E * cap, D), x.dtype).at[
+        jnp.where(keep, slot, E * cap - 1)
+    ].add(jnp.where(keep[:, None], contrib, 0))
+
+    if ep_axis is not None and ep > 1:
+        # (ep, e_loc*cap, D) -> exchange -> (e_loc, ep*cap, D)
+        buf = buf.reshape(ep, e_loc * cap, D)
+        buf = lax.all_to_all(buf, ep_axis, split_axis=0, concat_axis=0,
+                             tiled=False)
+        # buf now (ep, e_loc*cap, D) where leading dim = source device
+        h = buf.reshape(ep, e_loc, cap, D).transpose(1, 0, 2, 3)
+        h = h.reshape(e_loc, ep * cap, D)
+    else:
+        h = buf.reshape(e_loc, cap, D)
+
+    # expert MLP batched over local experts
+    w1 = p[prefix + "w1"].astype(x.dtype)
+    w2 = p[prefix + "w2"].astype(x.dtype)
+    if prefix + "w3" in p:
+        g = jnp.einsum("ecd,edf->ecf", h, w1)
+        u = jnp.einsum("ecd,edf->ecf", h, p[prefix + "w3"].astype(x.dtype))
+        h = jax.nn.silu(g) * u
+    else:
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", h, w1))
+    out_e = jnp.einsum("ecf,efd->ecd", h, w2)
+
+    if ep_axis is not None and ep > 1:
+        out_e = out_e.reshape(e_loc, ep, cap, D).transpose(1, 0, 2, 3)
+        out_e = out_e.reshape(ep, e_loc * cap, D)
+        out_e = lax.all_to_all(out_e, ep_axis, split_axis=0, concat_axis=0,
+                               tiled=False)
+        out_flat = out_e.reshape(E * cap, D)
+    else:
+        out_flat = out_e.reshape(E * cap, D)
+
+    gathered = out_flat[slot] * (flat_w * keep)[:, None]
+    out = jnp.zeros((N, D), x.dtype).at[flat_tok].add(gathered)
+    return out.reshape(B, T, D), aux

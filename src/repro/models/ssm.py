@@ -1,0 +1,271 @@
+"""State-space / recurrent blocks: Mamba-style selective SSM (S6), and the
+xLSTM pair (mLSTM: matrix memory, chunkwise-parallel; sLSTM: scalar memory,
+sequential scan) [arXiv:2405.04517, arXiv:2312.00752].
+
+All recurrences are O(T) in time and O(chunk) in memory — this is what makes
+the ``long_500k`` decode shape (and 32k prefill) viable for the SSM/hybrid
+architectures where full attention is skipped.
+
+TPU adaptation: the chunkwise form turns the recurrence into small dense
+matmuls (MXU-friendly) with a carried state, instead of the GPU kernels'
+warp-level scans.  Gating runs in log-space for stability (ratios <= 1 within
+a chunk).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+# ---------------------------------------------------------------------------
+# generic diagonal linear recurrence  h_t = a_t * h_{t-1} + b_t
+# ---------------------------------------------------------------------------
+
+def diagonal_scan(a, b, h0=None, chunk: int = 256):
+    """a, b: (B, T, ...) with matching trailing dims.  Returns (h (B,T,...),
+    h_last).  Chunked: associative_scan inside a chunk, lax.scan across."""
+    B, T = a.shape[:2]
+    chunk = min(chunk, T)
+    nc = -(-T // chunk)
+    pad = nc * chunk - T
+    if pad:
+        a = jnp.pad(a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2),
+                    constant_values=1.0)
+        b = jnp.pad(b, [(0, 0), (0, pad)] + [(0, 0)] * (b.ndim - 2))
+    ac = a.reshape((B, nc, chunk) + a.shape[2:]).transpose(
+        (1, 0, 2) + tuple(range(3, a.ndim + 1)))
+    bc = b.reshape((B, nc, chunk) + b.shape[2:]).transpose(
+        (1, 0, 2) + tuple(range(3, b.ndim + 1)))
+    if h0 is None:
+        h0 = jnp.zeros((B,) + a.shape[2:], a.dtype)
+
+    def combine(x, y):
+        (ax, bx), (ay, by) = x, y
+        return ax * ay, bx * ay + by
+
+    def body(h, xs):
+        a_i, b_i = xs  # (B, chunk, ...)
+        pa, pb = lax.associative_scan(combine, (a_i, b_i), axis=1)
+        h_i = pa * h[:, None] + pb
+        return h_i[:, -1], h_i
+
+    h_last, hs = lax.scan(body, h0, (ac, bc))
+    hs = hs.transpose((1, 0, 2) + tuple(range(3, a.ndim + 1)))
+    hs = hs.reshape((B, nc * chunk) + a.shape[2:])[:, :T]
+    return hs, h_last
+
+
+# ---------------------------------------------------------------------------
+# Mamba-style selective SSM (diagonal A, input-dependent dt/B/C)
+# ---------------------------------------------------------------------------
+
+def mamba_mix(cfg, p, x, *, state=None, prefix="ssm_", d_inner=None):
+    """x: (B, T, D).  Returns (y (B, T, d_inner_out -> D), new_state).
+
+    state (decode): dict(conv=(B, K-1, d_in), ssm=(B, d_in, N)).
+    Parameters: in_proj (D, 2*d_in), conv (K, d_in), dt_proj (d_in,),
+    x_bc (d_in, 2N + 1? -> use (d_in, 2N) for B,C and (d_in,) dt bias),
+    A_log (d_in, N), out_proj (d_in, D).
+    """
+    B, T, D = x.shape
+    N = cfg.ssm_state
+    d_in = d_inner or cfg.ssm_expand * D
+    K = cfg.conv_kernel
+
+    xz = x @ p[prefix + "in_proj"].astype(x.dtype)  # (B,T,2*d_in)
+    xi, z = jnp.split(xz, 2, axis=-1)
+
+    # depthwise causal conv1d
+    conv_w = p[prefix + "conv"].astype(x.dtype)  # (K, d_in)
+    if state is None:
+        xpad = jnp.pad(xi, ((0, 0), (K - 1, 0), (0, 0)))
+        new_conv = xpad[:, -(K - 1):, :] if K > 1 else jnp.zeros((B, 0, d_in), x.dtype)
+    else:
+        xpad = jnp.concatenate([state["conv"].astype(x.dtype), xi], axis=1)
+        new_conv = xpad[:, -(K - 1):, :] if K > 1 else state["conv"]
+    xc = sum(xpad[:, i : i + T, :] * conv_w[i] for i in range(K))
+    xc = jax.nn.silu(xc)
+
+    # input-dependent dt, B, C
+    dt = jax.nn.softplus(
+        xc @ p[prefix + "dt_w"].astype(x.dtype)
+        + p[prefix + "dt_b"].astype(x.dtype)
+    ).astype(jnp.float32)  # (B,T,d_in)
+    bc = xc @ p[prefix + "bc_w"].astype(x.dtype)  # (B,T,2N)
+    Bm, Cm = jnp.split(bc.astype(jnp.float32), 2, axis=-1)  # (B,T,N)
+    A = -jnp.exp(p[prefix + "A_log"].astype(jnp.float32))  # (d_in, N)
+
+    a = jnp.exp(dt[..., None] * A)                      # (B,T,d_in,N)
+    bterm = (dt * xc.astype(jnp.float32))[..., None] * Bm[:, :, None, :]
+
+    h0 = state["ssm"].astype(jnp.float32) if state is not None else None
+    hs, h_last = diagonal_scan(a, bterm, h0)
+    y = jnp.einsum("btdn,btn->btd", hs, Cm).astype(x.dtype)
+    y = y + xc * p[prefix + "skip"].astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    out = y @ p[prefix + "out_proj"].astype(x.dtype)
+    new_state = {"conv": new_conv.astype(x.dtype), "ssm": h_last.astype(jnp.float32)}
+    return out, new_state
+
+
+def mamba_param_shapes(cfg, D, prefix="ssm_", d_inner=None):
+    N = cfg.ssm_state
+    d_in = d_inner or cfg.ssm_expand * D
+    K = cfg.conv_kernel
+    return {
+        prefix + "in_proj": (D, 2 * d_in),
+        prefix + "conv": (K, d_in),
+        prefix + "dt_w": (d_in, d_in),
+        prefix + "dt_b": (d_in,),
+        prefix + "bc_w": (d_in, 2 * N),
+        prefix + "A_log": (d_in, N),
+        prefix + "skip": (d_in,),
+        prefix + "out_proj": (d_in, D),
+    }
+
+
+# ---------------------------------------------------------------------------
+# mLSTM: matrix-memory LSTM, chunkwise parallel (xLSTM)
+# ---------------------------------------------------------------------------
+
+def mlstm_mix(cfg, p, x, *, state=None, prefix="m_"):
+    """Matrix-memory cell: C_t = f_t C_{t-1} + i_t k_t v_t^T, h = q C / |q n|.
+
+    Sigmoid gates (stabilized variant; the exponential-gating of the paper is
+    replaced by a bounded gate — see DESIGN.md §Arch-applicability).
+    Chunkwise-parallel: intra-chunk attention-like matmuls + carried (hd,hd)
+    state; O(T) time, MXU-friendly.
+    """
+    B, T, D = x.shape
+    H = cfg.n_heads
+    hd = D // H
+    chunk = min(128, T)
+
+    def heads(name):
+        return (x @ p[prefix + name].astype(x.dtype)).reshape(B, T, H, hd).transpose(0, 2, 1, 3)
+
+    q, k, v = heads("wq"), heads("wk"), heads("wv")
+    q = q.astype(jnp.float32) / (hd ** 0.5)
+    k = k.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    gates = x @ p[prefix + "wgate"].astype(x.dtype)  # (B,T,2H)
+    f = jax.nn.sigmoid(gates[..., :H].astype(jnp.float32) + 4.0)  # bias->remember
+    i = jax.nn.sigmoid(gates[..., H:].astype(jnp.float32))
+    f = f.transpose(0, 2, 1)  # (B,H,T)
+    i = i.transpose(0, 2, 1)
+
+    nc = -(-T // chunk)
+    pad = nc * chunk - T
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        f = jnp.pad(f, ((0, 0), (0, 0), (0, pad)), constant_values=1.0)
+        i = jnp.pad(i, ((0, 0), (0, 0), (0, pad)))
+
+    def to_chunks(t):
+        return t.reshape((B, H, nc, chunk) + t.shape[3:]).transpose(
+            (2, 0, 1, 3) + tuple(range(4, t.ndim + 1)))
+
+    qc, kc, vc = to_chunks(q), to_chunks(k), to_chunks(v)
+    fc, ic = to_chunks(f), to_chunks(i)
+
+    if state is None:
+        C0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+        n0 = jnp.zeros((B, H, hd), jnp.float32)
+    else:
+        C0, n0 = state["C"].astype(jnp.float32), state["n"].astype(jnp.float32)
+
+    def body(carry, xs):
+        C, n = carry
+        q_i, k_i, v_i, f_i, i_i = xs  # (B,H,c,*)
+        logf = jnp.log(jnp.maximum(f_i, 1e-8))
+        cum = jnp.cumsum(logf, axis=-1)            # (B,H,c) log prod_{s<=t}
+        # inter-chunk: h_inter = d_t * (q_t @ C)
+        d = jnp.exp(cum)
+        h_inter = jnp.einsum("bhtd,bhde->bhte", q_i, C) * d[..., None]
+        n_inter = jnp.einsum("bhtd,bhd->bht", q_i, n) * d
+        # intra-chunk: A[t,s] = (q_t.k_s) exp(cum_t - cum_s) i_s for s<=t
+        ratio = cum[..., :, None] - cum[..., None, :]  # (B,H,c,c)
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        w = jnp.where(tri, jnp.exp(ratio), 0.0) * i_i[..., None, :]
+        scores = jnp.einsum("bhtd,bhsd->bhts", q_i, k_i) * w
+        h_intra = jnp.einsum("bhts,bhse->bhte", scores, v_i)
+        n_intra = jnp.einsum("bhts,bhs->bht", scores, jnp.ones_like(i_i))
+        # new carry
+        dc = jnp.exp(cum[..., -1])
+        rd = jnp.exp(cum[..., -1:] - cum)          # decay from s to end
+        kw = k_i * (rd * i_i)[..., None]
+        C_new = C * dc[..., None, None] + jnp.einsum("bhsd,bhse->bhde", kw, v_i)
+        n_new = n * dc[..., None] + kw.sum(axis=2)
+        h = (h_inter + h_intra) / jnp.maximum(
+            jnp.abs(n_inter + n_intra), 1.0)[..., None]
+        return (C_new, n_new), h
+
+    (C, n), hs = lax.scan(body, (C0, n0), (qc, kc, vc, fc, ic))
+    hs = hs.transpose(1, 2, 0, 3, 4).reshape(B, H, nc * chunk, hd)[:, :, :T]
+    out = hs.transpose(0, 2, 1, 3).reshape(B, T, D).astype(x.dtype)
+    out = out * jax.nn.silu(x @ p[prefix + "wog"].astype(x.dtype))
+    out = out @ p[prefix + "wo"].astype(x.dtype)
+    return out, {"C": C, "n": n}
+
+
+def mlstm_param_shapes(cfg, D, prefix="m_"):
+    H = cfg.n_heads
+    return {
+        prefix + "wq": (D, D),
+        prefix + "wk": (D, D),
+        prefix + "wv": (D, D),
+        prefix + "wgate": (D, 2 * H),
+        prefix + "wog": (D, D),
+        prefix + "wo": (D, D),
+    }
+
+
+# ---------------------------------------------------------------------------
+# sLSTM: scalar-memory LSTM with exponential gating (sequential)
+# ---------------------------------------------------------------------------
+
+def slstm_mix(cfg, p, x, *, state=None, prefix="s_"):
+    """Sequential scan over time; per-head scalar memory (c, n, m stabilizer).
+    [arXiv:2405.04517 eq. 16-24, simplified: no block-diagonal recurrent R]"""
+    B, T, D = x.shape
+    H = cfg.n_heads
+    hd = D // H
+
+    zifo = x @ p[prefix + "w_zifo"].astype(x.dtype)  # (B,T,4D)
+    zifo = zifo.astype(jnp.float32).reshape(B, T, 4, H, hd)
+    z, i_g, f_g, o_g = [zifo[:, :, j] for j in range(4)]  # (B,T,H,hd)
+
+    if state is None:
+        c0 = jnp.zeros((B, H, hd), jnp.float32)
+        n0 = jnp.zeros((B, H, hd), jnp.float32)
+        m0 = jnp.full((B, H, hd), -1e30, jnp.float32)
+    else:
+        c0, n0, m0 = (state[k].astype(jnp.float32) for k in ("c", "n", "m"))
+
+    def step(carry, xs):
+        c, n, m = carry
+        z_t, i_t, f_t, o_t = xs  # (B,H,hd)
+        logf = -jax.nn.softplus(-f_t)  # log sigmoid(f)
+        m_new = jnp.maximum(logf + m, i_t)
+        ig = jnp.exp(i_t - m_new)
+        fg = jnp.exp(logf + m - m_new)
+        c_new = fg * c + ig * jnp.tanh(z_t)
+        n_new = fg * n + ig
+        h = jax.nn.sigmoid(o_t) * c_new / jnp.maximum(n_new, 1.0)
+        return (c_new, n_new, m_new), h
+
+    xs = tuple(t.transpose(1, 0, 2, 3) for t in (z, i_g, f_g, o_g))
+    (c, n, m), hs = lax.scan(step, (c0, n0, m0), xs)
+    hs = hs.transpose(1, 0, 2, 3).reshape(B, T, D).astype(x.dtype)
+    out = hs @ p[prefix + "wo"].astype(x.dtype)
+    return out, {"c": c, "n": n, "m": m}
+
+
+def slstm_param_shapes(cfg, D, prefix="s_"):
+    return {
+        prefix + "w_zifo": (D, 4 * D),
+        prefix + "wo": (D, D),
+    }

@@ -1,0 +1,17 @@
+from .adamw import AdamW
+from .sgd import SGDMomentum
+from .adam8bit import Adam8bit
+from .muon import Muon
+from .shampoo import Shampoo
+
+OPTIMIZERS = {
+    "adamw": AdamW,
+    "sgd": SGDMomentum,
+    "adam8bit": Adam8bit,
+    "muon": Muon,
+    "shampoo": Shampoo,
+}
+
+
+def make_optimizer(cfg):
+    return OPTIMIZERS[cfg.optimizer](cfg)

@@ -1,0 +1,69 @@
+"""8-bit Adam (paper §6.3): block-wise INT8-quantized moment states.
+
+Because the planner aligns every tensor start and the shard size to
+``cfg.quant_block`` (the `align` option) for adam8bit models, fixed
+quant tiles over the *local shard* never straddle a tensor start or a device
+boundary -- each device (de)quantizes with zero communication, which is
+the paper's central flexibility claim.
+
+States: m, v stored as int8 codes + one f32 absmax scale per block.
+Optionally uses the fused Pallas kernel (repro.kernels.adam8bit_update);
+defaults to the jnp path, which is also the kernel's oracle.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..quant.blockwise import (
+    dequantize_blockwise, dequantize_blockwise_log, quantize_blockwise,
+    quantize_blockwise_log,
+)
+from .common import OptimizerBase, matrix_mask_local
+
+
+class Adam8bit(OptimizerBase):
+    b1, b2, eps, wd = 0.9, 0.95, 1e-8, 0.1
+
+    def __init__(self, cfg):
+        super().__init__(cfg)
+        self.block = cfg.quant_block
+
+    def state_shapes(self, runtime):
+        bq = self.block
+        for lo in runtime.layouts.values():
+            assert lo.plan.shard_size % bq == 0, (
+                f"group {lo.name}: shard {lo.plan.shard_size} not aligned to "
+                f"quant block {bq} -- planner align missing?"
+            )
+        return {
+            "m8": self._like_params(runtime, jnp.int8),
+            "v8": self._like_params(runtime, jnp.int8),
+            "ms": self._like_params(runtime, jnp.float32, div=bq),
+            "vs": self._like_params(runtime, jnp.float32, div=bq),
+        }
+
+    def update(self, runtime, params, grads, state, step):
+        lr = self.schedule(step)
+        t = step.astype(jnp.float32) + 1.0
+        c1 = 1.0 - self.b1 ** t
+        c2 = 1.0 - self.b2 ** t
+        bq = self.block
+        new_p = {}
+        new_s = {k: {} for k in ("m8", "v8", "ms", "vs")}
+        for name, w in params.items():
+            g = grads[name].astype(jnp.float32)
+            # m: signed linear int8; v: log-space int8 (dynamic range --
+            # linear quantization underflows v and explodes the update)
+            m = dequantize_blockwise(state["m8"][name], state["ms"][name], bq)
+            v = dequantize_blockwise_log(state["v8"][name],
+                                         state["vs"][name], bq)
+            m = self.b1 * m + (1 - self.b1) * g
+            v = self.b2 * v + (1 - self.b2) * g * g
+            upd = (m / c1) / (jnp.sqrt(v / c2) + self.eps)
+            wdm = matrix_mask_local(runtime, runtime.layouts[name], w.shape)
+            new_p[name] = w - lr * (upd + self.wd * wdm * w)
+            m8, ms = quantize_blockwise(m, bq)
+            v8, vs = quantize_blockwise_log(v, bq)
+            new_s["m8"][name], new_s["ms"][name] = m8, ms
+            new_s["v8"][name], new_s["vs"][name] = v8, vs
+        return new_p, new_s

@@ -1,0 +1,30 @@
+"""AdamW on flat DBuffer shards (fp32 master weights, group-fused update)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .common import OptimizerBase, matrix_mask_local
+
+
+class AdamW(OptimizerBase):
+    b1, b2, eps, wd = 0.9, 0.95, 1e-8, 0.1
+
+    def state_shapes(self, runtime):
+        return {"m": self._like_params(runtime),
+                "v": self._like_params(runtime)}
+
+    def update(self, runtime, params, grads, state, step):
+        lr = self.schedule(step)
+        t = step.astype(jnp.float32) + 1.0
+        c1 = 1.0 - self.b1 ** t
+        c2 = 1.0 - self.b2 ** t
+        new_p, new_m, new_v = {}, {}, {}
+        for name, w in params.items():
+            g = grads[name].astype(jnp.float32)
+            m = self.b1 * state["m"][name] + (1 - self.b1) * g
+            v = self.b2 * state["v"][name] + (1 - self.b2) * g * g
+            upd = (m / c1) / (jnp.sqrt(v / c2) + self.eps)
+            wdm = matrix_mask_local(runtime, runtime.layouts[name], w.shape)
+            new_p[name] = w - lr * (upd + self.wd * wdm * w)
+            new_m[name], new_v[name] = m, v
+        return new_p, {"m": new_m, "v": new_v}

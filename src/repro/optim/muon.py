@@ -1,0 +1,117 @@
+"""Distributed Muon via RaggedShard redistribute (paper §6.3, Algorithm 2).
+
+Muon's Newton-Schulz preconditioner needs each 2-D parameter as its full
+matrix.  The paper redistributes each tensor to a load-balanced root rank,
+runs NS there, and redistributes back.  SPMD/TPU adaptation (DESIGN.md):
+the layer dimension of a stacked group plays the role of root selection --
+the gathered momentum matrices (L, a, b) are *resharded over layers* across
+the FSDP group (each device preconditioning L/m whole matrices: uneven whole-
+matrix ownership is exactly a row-wise RaggedShard over the L axis), then
+all-gathered back and scattered into the flat update buffer.  Communication
+= one extra all-gather of the NS outputs, matching Algorithm 2's
+redistribute-back.
+
+Non-2D parameters and unstacked groups (embeddings, head, norms) fall back
+to AdamW, as in the Muon reference practice and the paper's experiments.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from .common import OptimizerBase, device_linear_index, matrix_mask_local
+
+_NS_COEFFS = (3.4445, -4.7750, 2.0315)
+
+
+def newton_schulz(G, steps: int = 5, eps: float = 1e-7):
+    """Matrix-sign iteration; G: (a, b) with any aspect."""
+    a, b, c = _NS_COEFFS
+    transpose = G.shape[0] > G.shape[1]
+    X = G.T if transpose else G
+    X = X / (jnp.linalg.norm(X) + eps)
+    for _ in range(steps):
+        A = X @ X.T
+        B = b * A + c * (A @ A)
+        X = a * X + B @ X
+    return (X.T if transpose else X).astype(G.dtype)
+
+
+class Muon(OptimizerBase):
+    mu = 0.95
+    b1, b2, eps, wd = 0.9, 0.95, 1e-8, 0.1
+
+    def state_shapes(self, runtime):
+        return {k: self._like_params(runtime) for k in ("mom", "m", "v")}
+
+    # ------------------------------------------------------------------ #
+    def _muon_group_update(self, runtime, lo, mom_local):
+        """mom_local: (L, S).  Returns (L, S) NS-preconditioned update for
+        2-D positions (zeros elsewhere)."""
+        L = lo.n_layers
+        S = lo.plan.shard_size
+        m = int(np.prod([
+            dict(zip(runtime.mesh.axis_names,
+                     runtime.mesh.devices.shape))[a]
+            for a in lo.fsdp_axes
+        ])) or 1
+        dev = device_linear_index(runtime, lo)
+
+        if lo.fsdp_axes:
+            full = lax.all_gather(mom_local, lo.fsdp_axes, tiled=True,
+                                  axis=1)  # (L, m*S)
+        else:
+            full = mom_local
+        upd_full = jnp.zeros_like(full)
+        l_loc = -(-L // m)
+        Lp = l_loc * m
+        for pl in lo.plan.placements:
+            if len(pl.spec.shape) != 2:
+                continue
+            a, b = pl.spec.shape
+            mats = lax.slice(full, (0, pl.offset), (L, pl.end)).reshape(L, a, b)
+            if Lp != L:
+                mats = jnp.pad(mats, ((0, Lp - L), (0, 0), (0, 0)))
+            mine = lax.dynamic_slice(mats, (dev * l_loc, 0, 0), (l_loc, a, b))
+            o = jax.vmap(newton_schulz)(mine.astype(jnp.float32))
+            o = o * jnp.sqrt(jnp.maximum(1.0, a / b))
+            if lo.fsdp_axes:
+                o = lax.all_gather(o, lo.fsdp_axes, tiled=True, axis=0)  # (Lp,a,b)
+            # static slice assignment (offsets can exceed int32 as traced
+            # starts; as python slices they stay exact)
+            upd_full = upd_full.at[:, pl.offset:pl.end].set(
+                o[:L].reshape(L, a * b).astype(upd_full.dtype))
+        return lax.dynamic_slice(upd_full, (0, dev * S), (L, S))
+
+    # ------------------------------------------------------------------ #
+    def update(self, runtime, params, grads, state, step):
+        lr = self.schedule(step)
+        t = step.astype(jnp.float32) + 1.0
+        c1 = 1.0 - self.b1 ** t
+        c2 = 1.0 - self.b2 ** t
+        new_p = {}
+        new_s = {"mom": {}, "m": {}, "v": {}}
+        for name, w in params.items():
+            lo = runtime.layouts[name]
+            g = grads[name].astype(jnp.float32)
+            mom = self.mu * state["mom"][name] + g
+            m = self.b1 * state["m"][name] + (1 - self.b1) * g
+            v = self.b2 * state["v"][name] + (1 - self.b2) * g * g
+            adam_upd = (m / c1) / (jnp.sqrt(v / c2) + self.eps)
+            mask2d = matrix_mask_local(runtime, lo, w.shape)
+            use_muon = lo.n_layers is not None and any(
+                len(pl.spec.shape) == 2 for pl in lo.plan.placements
+            )
+            if use_muon:
+                muon_upd = self._muon_group_update(
+                    runtime, lo, self.mu * mom + g  # nesterov-style
+                )
+                upd = mask2d * muon_upd + (1 - mask2d) * adam_upd
+            else:
+                upd = adam_upd
+            new_p[name] = w - lr * (upd + self.wd * mask2d * w)
+            new_s["mom"][name] = mom
+            new_s["m"][name], new_s["v"][name] = m, v
+        return new_p, new_s

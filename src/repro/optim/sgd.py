@@ -1,0 +1,24 @@
+"""SGD with momentum on flat shards (the paper's OOM-avoidance baseline for
+GPT-OSS; we use it analogously for the 340B config without 8-bit Adam)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .common import OptimizerBase
+
+
+class SGDMomentum(OptimizerBase):
+    mu = 0.9
+
+    def state_shapes(self, runtime):
+        return {"m": self._like_params(runtime)}
+
+    def update(self, runtime, params, grads, state, step):
+        lr = self.schedule(step)
+        new_p, new_m = {}, {}
+        for name, w in params.items():
+            g = grads[name].astype(jnp.float32)
+            m = self.mu * state["m"][name] + g
+            new_p[name] = w - lr * m
+            new_m[name] = m
+        return new_p, {"m": new_m}

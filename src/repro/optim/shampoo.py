@@ -1,0 +1,159 @@
+"""Distributed Shampoo via RaggedShard redistribute (paper §2.1 motivation).
+
+Shampoo preconditions each 2-D parameter with Kronecker factors
+L = sum G G^T and R = sum G^T G:  update = L^{-1/4} G R^{-1/4}.
+Like Muon (Algorithm 2), this needs whole matrices; we reuse the same
+SPMD-clean distribution: the layer dimension of each stacked group is
+resharded across the FSDP group (each device preconditions L/m whole
+matrices -- row-wise RaggedShard over layers), and the Kronecker factors are
+*stored* sharded the same way, so preconditioner updates are local and only
+the preconditioned updates are gathered back.
+
+Inverse 4th roots via eigh each step (production systems amortize this over
+~100 steps; kept per-step here for simplicity -- noted in DESIGN.md).
+Non-2D parameters and unstacked groups fall back to AdamW.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from .common import OptimizerBase, device_linear_index, matrix_mask_local
+
+
+def _inv_4th_root(M, eps=1e-6):
+    """M symmetric PSD (k, k) -> M^{-1/4} via eigendecomposition."""
+    w, V = jnp.linalg.eigh(M.astype(jnp.float32))
+    w = jnp.maximum(w, eps * jnp.maximum(w.max(), 1.0))
+    return (V * (w ** -0.25)) @ V.T
+
+
+class Shampoo(OptimizerBase):
+    b1 = 0.9          # momentum on the preconditioned update
+    eps, wd = 1e-6, 0.1
+
+    # ------------------------------------------------------------------ #
+    def _factor_specs(self, runtime):
+        """{state_key: (global_shape, pspec)} for the Kronecker factors,
+        sharded over the padded layer dim across the group's FSDP axes."""
+        out = {}
+        sizes = dict(zip(runtime.mesh.axis_names,
+                         runtime.mesh.devices.shape))
+        for gname, lo in runtime.layouts.items():
+            if lo.n_layers is None:
+                continue
+            m = int(np.prod([sizes[a] for a in lo.fsdp_axes])) or 1
+            lp = -(-lo.n_layers // m) * m
+            axes = lo.fsdp_axes if len(lo.fsdp_axes) > 1 else (
+                lo.fsdp_axes[0] if lo.fsdp_axes else None)
+            for pl in lo.plan.placements:
+                if len(pl.spec.shape) != 2:
+                    continue
+                a, b = pl.spec.shape
+                out[f"{gname}/{pl.spec.name}/L"] = (
+                    (lp, a, a), P(axes, None, None))
+                out[f"{gname}/{pl.spec.name}/R"] = (
+                    (lp, b, b), P(axes, None, None))
+        return out
+
+    def state_shapes(self, runtime):
+        base = {
+            "mom": self._like_params(runtime),
+            "m": self._like_params(runtime),
+            "v": self._like_params(runtime),
+        }
+        facs = {}
+        for key, (shape, spec) in self._factor_specs(runtime).items():
+            facs[key] = jax.ShapeDtypeStruct(
+                shape, jnp.float32,
+                sharding=NamedSharding(runtime.mesh, spec))
+        base["factors"] = facs
+        return base
+
+    def pspecs(self, runtime):
+        ps = {n: lo.pspec() for n, lo in runtime.layouts.items()}
+        out = {k: dict(ps) for k in ("mom", "m", "v")}
+        out["factors"] = {
+            key: spec for key, (shape, spec) in
+            self._factor_specs(runtime).items()
+        }
+        return out
+
+    # ------------------------------------------------------------------ #
+    def _precondition_group(self, runtime, lo, gname, g_local, factors):
+        """g_local: (L, S) local grad shard.  Returns ((L, S) preconditioned
+        update for 2-D positions, updated factors)."""
+        L = lo.n_layers
+        S = lo.plan.shard_size
+        sizes = dict(zip(runtime.mesh.axis_names,
+                         runtime.mesh.devices.shape))
+        m = int(np.prod([sizes[a] for a in lo.fsdp_axes])) or 1
+        dev = device_linear_index(runtime, lo)
+        full = (lax.all_gather(g_local, lo.fsdp_axes, tiled=True, axis=1)
+                if lo.fsdp_axes else g_local)
+        upd_full = jnp.zeros_like(full)
+        l_loc = -(-L // m)
+        Lp = l_loc * m
+        new_factors = {}
+        for pl in lo.plan.placements:
+            if len(pl.spec.shape) != 2:
+                continue
+            a, b = pl.spec.shape
+            mats = lax.slice(full, (0, pl.offset), (L, pl.end)).reshape(L, a, b)
+            if Lp != L:
+                mats = jnp.pad(mats, ((0, Lp - L), (0, 0), (0, 0)))
+            mine = lax.dynamic_slice(mats, (dev * l_loc, 0, 0),
+                                     (l_loc, a, b)).astype(jnp.float32)
+            Lf = factors[f"{gname}/{pl.spec.name}/L"] + jnp.einsum(
+                "lab,lcb->lac", mine, mine)
+            Rf = factors[f"{gname}/{pl.spec.name}/R"] + jnp.einsum(
+                "lab,lac->lbc", mine, mine)
+            Li = jax.vmap(_inv_4th_root)(Lf)
+            Ri = jax.vmap(_inv_4th_root)(Rf)
+            o = jnp.einsum("lac,lcb,lbd->lad", Li, mine, Ri)
+            # graft to the gradient's per-matrix RMS (keeps lr comparable)
+            gn = jnp.sqrt(jnp.mean(mine ** 2, axis=(1, 2), keepdims=True))
+            on = jnp.sqrt(jnp.mean(o ** 2, axis=(1, 2), keepdims=True))
+            o = o * (gn / jnp.maximum(on, 1e-12))
+            if lo.fsdp_axes:
+                o = lax.all_gather(o, lo.fsdp_axes, tiled=True, axis=0)
+            upd_full = upd_full.at[:, pl.offset:pl.end].set(
+                o[:L].reshape(L, a * b).astype(upd_full.dtype))
+            new_factors[f"{gname}/{pl.spec.name}/L"] = Lf
+            new_factors[f"{gname}/{pl.spec.name}/R"] = Rf
+        local_upd = lax.dynamic_slice(upd_full, (0, dev * S), (L, S))
+        return local_upd, new_factors
+
+    # ------------------------------------------------------------------ #
+    def update(self, runtime, params, grads, state, step):
+        lr = self.schedule(step)
+        t = step.astype(jnp.float32) + 1.0
+        c1 = 1.0 - 0.9 ** t
+        c2 = 1.0 - 0.95 ** t
+        new_p = {}
+        new_s = {"mom": {}, "m": {}, "v": {}, "factors": dict(state["factors"])}
+        for name, w in params.items():
+            lo = runtime.layouts[name]
+            g = grads[name].astype(jnp.float32)
+            m = 0.9 * state["m"][name] + 0.1 * g
+            v = 0.95 * state["v"][name] + 0.05 * g * g
+            adam_upd = (m / c1) / (jnp.sqrt(v / c2) + 1e-8)
+            mask2d = matrix_mask_local(runtime, lo, w.shape)
+            has_mats = lo.n_layers is not None and any(
+                len(pl.spec.shape) == 2 for pl in lo.plan.placements)
+            if has_mats:
+                pre, nf = self._precondition_group(
+                    runtime, lo, name, g, state["factors"])
+                new_s["factors"].update(nf)
+                mom = self.b1 * state["mom"][name] + pre
+                upd = mask2d * mom + (1 - mask2d) * adam_upd
+            else:
+                mom = state["mom"][name]
+                upd = adam_upd
+            new_p[name] = w - lr * (upd + self.wd * mask2d * w)
+            new_s["mom"][name] = mom
+            new_s["m"][name], new_s["v"][name] = m, v
+        return new_p, new_s

@@ -1,0 +1,123 @@
+"""Pallas kernels vs ref.py oracles: shape/dtype sweeps in interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+
+def rnd(shape, seed=0, dtype=np.float32, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(0, scale, shape).astype(dtype))
+
+
+# ---------------------------------------------------------------------------
+# blockwise quant
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,block", [
+    (1024, 128), (4096, 1024), (8192, 1024), (2048, 256), (512, 512),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_quantize_matches_ref(n, block, dtype):
+    x = rnd((n,), seed=n, dtype=np.float32).astype(dtype)
+    ck, cs = ops.quantize(x, block=block)
+    rk, rs = ref.quantize_ref(x, block)
+    diff = np.abs(np.asarray(ck, np.int32) - np.asarray(rk, np.int32))
+    if dtype == jnp.float32:
+        assert (diff == 0).all()
+    else:
+        # bf16 inputs: scale-path rounding can flip a .5 tie by one code
+        assert diff.max() <= 1 and (diff != 0).mean() < 1e-3
+    np.testing.assert_allclose(np.asarray(cs), np.asarray(rs), rtol=1e-6)
+
+
+@pytest.mark.parametrize("lead", [(), (3,), (2, 5)])
+def test_quantize_leading_dims(lead):
+    x = rnd(lead + (2048,), seed=7)
+    ck, cs = ops.quantize(x, block=256)
+    rk, rs = ref.quantize_ref(x, 256)
+    assert ck.shape == x.shape and cs.shape == lead + (8,)
+    np.testing.assert_array_equal(np.asarray(ck), np.asarray(rk))
+
+
+def test_quant_dequant_roundtrip_error_bounded():
+    x = rnd((8192,), seed=3, scale=2.0)
+    ck, cs = ops.quantize(x, block=1024)
+    back = ops.dequantize(ck, cs, block=1024)
+    # int8 symmetric: error <= scale/2 = absmax/254 per block
+    err = np.abs(np.asarray(back) - np.asarray(x))
+    bound = np.repeat(np.asarray(cs), 1024) / 2 + 1e-7
+    assert (err <= bound).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 16), st.sampled_from([128, 256, 1024]),
+       st.integers(0, 10_000))
+def test_quantize_property(nblocks, block, seed):
+    x = rnd((nblocks * block,), seed=seed)
+    ck, cs = ops.quantize(x, block=block)
+    rk, rs = ref.quantize_ref(x, block)
+    np.testing.assert_array_equal(np.asarray(ck), np.asarray(rk))
+    np.testing.assert_allclose(np.asarray(cs), np.asarray(rs), rtol=1e-6)
+    # invariant: dequantized absmax reproduces the original per block
+    back = ops.dequantize(ck, cs, block=block).reshape(nblocks, block)
+    orig = np.asarray(x).reshape(nblocks, block)
+    np.testing.assert_allclose(
+        np.abs(back).max(1), np.abs(orig).max(1), rtol=1e-2, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# fused adamw
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [256, 8192, 128 * 65])
+def test_adamw_kernel_matches_ref(n):
+    n = (n // 128) * 128
+    w, g = rnd((n,), 1), rnd((n,), 2)
+    m, v = rnd((n,), 3, scale=0.1), jnp.abs(rnd((n,), 4, scale=0.01))
+    mask = (rnd((n,), 5) > 0).astype(jnp.float32)
+    kw = dict(lr=1e-3, b1=0.9, b2=0.95, eps=1e-8, wd=0.1, c1=0.5, c2=0.25)
+    w2, m2, v2 = ops.adamw_update(w, g, m, v, mask, **kw)
+    rw, rm, rv = ref.adamw_update_ref(w, g, m, v, mask, *kw.values())
+    np.testing.assert_allclose(np.asarray(w2), np.asarray(rw), rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(m2), np.asarray(rm), rtol=1e-5, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(v2), np.asarray(rv), rtol=1e-5, atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# fused 8-bit adam
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,block", [(4096, 1024), (2048, 256), (1024, 128)])
+def test_adam8bit_kernel_matches_ref(n, block):
+    nb = n // block
+    w, g = rnd((n,), 1), rnd((n,), 2)
+    m0 = rnd((n,), 3, scale=0.1)
+    v0 = jnp.abs(rnd((n,), 4, scale=0.01))
+    m8, ms = ops.quantize(m0, block=block)
+    v8, vs = ops.quantize(v0, block=block)
+    mask = jnp.ones((n,), jnp.float32)
+    kw = dict(lr=1e-3, b1=0.9, b2=0.95, eps=1e-8, wd=0.1, c1=0.5, c2=0.25)
+    outs = ops.adam8bit_update(w, g, m8, v8, ms, vs, mask, block=block, **kw)
+    refs = ref.adam8bit_update_ref(w, g, m8, v8, ms, vs, mask,
+                                   *kw.values(), block)
+    for o, r, name in zip(outs, refs, ["w", "m8", "v8", "ms", "vs"]):
+        np.testing.assert_allclose(
+            np.asarray(o, np.float32), np.asarray(r, np.float32),
+            rtol=1e-5, atol=1e-6, err_msg=name)
+
+
+def test_adam8bit_zero_state_bootstraps():
+    n, block = 2048, 1024
+    w, g = rnd((n,), 1), rnd((n,), 2)
+    z8 = jnp.zeros((n,), jnp.int8)
+    zs = jnp.zeros((n // block,), jnp.float32)
+    mask = jnp.zeros((n,), jnp.float32)
+    kw = dict(lr=1e-3, b1=0.9, b2=0.95, eps=1e-8, wd=0.1, c1=0.1, c2=0.05)
+    w2, m8, v8, ms, vs = ops.adam8bit_update(
+        w, g, z8, v8=z8, ms=zs, vs=zs, mask=mask, block=block, **kw)
+    assert np.isfinite(np.asarray(w2)).all()
+    assert (np.asarray(ms) > 0).all()  # moments materialized
