@@ -21,6 +21,7 @@ import numpy as np
 
 from repro.configs import build_model, get_config
 from repro.core.fsdp import FSDPRuntime
+from repro.core.schedule import VARIANTS, CommSchedule
 from repro.launch.mesh import make_local_mesh
 from repro.optim import make_optimizer
 from repro.optim.adam8bit import Adam8bit
@@ -176,13 +177,15 @@ def run(quick: bool = False):
 
     results = {}
     variants = [
-        ("combined", "ragged", Adam8bit),
-        ("no_dbuffer", "ragged", Adam8bitPerTensor),
-        ("no_planning", "naive", Adam8bitUnplanned),
+        ("combined", "ragged", Adam8bit, CommSchedule.default()),
+        ("combined_overlap", "ragged", Adam8bit, VARIANTS["overlap_all"]),
+        ("no_dbuffer", "ragged", Adam8bitPerTensor, CommSchedule.default()),
+        ("no_planning", "naive", Adam8bitUnplanned, CommSchedule.default()),
     ]
-    for name, planner, opt_cls in variants:
+    for name, planner, opt_cls, sched in variants:
         model = build_model(cfg)
-        rt = FSDPRuntime(model, mesh, planner=planner, donate=False)
+        rt = FSDPRuntime(model, mesh, planner=planner, donate=False,
+                         schedule=sched)
         params = rt.init_params(0)
         opt = opt_cls(cfg)
         state = opt.init(rt)

@@ -18,6 +18,7 @@ import numpy as np
 
 from repro.configs import build_model, get_config
 from repro.core.fsdp import FSDPRuntime
+from repro.core.schedule import VARIANTS
 from repro.launch.mesh import make_local_mesh
 from repro.optim import make_optimizer
 
@@ -26,36 +27,42 @@ from .common import emit, timeit
 MODES = ["ragged", "fsdp2", "megatron", "naive"]
 
 
-def run(quick: bool = False, arch: str = "gpt-oss-120b"):
+def _bench_cfg(arch: str, quick: bool):
     cfg = get_config(arch).reduced()
     # a bit larger than smoke scale so copies matter
     if not quick:
         cfg = dataclasses.replace(cfg, n_layers=4, d_model=512, d_ff=1024,
                                   head_dim=128)
-    mesh = make_local_mesh(1, 1)
     rng = np.random.default_rng(0)
     batch = {"tokens": jnp.asarray(
         rng.integers(0, cfg.vocab, (8, 128)), jnp.int32)}
+    return cfg, batch
 
+
+def _measure_step(cfg, rt, batch, quick: bool):
+    """Median train-step wall time (us) + compiled temp bytes."""
+    params = rt.init_params(0)
+    opt = make_optimizer(cfg)
+    state = opt.init(rt)
+    fn = rt.make_train_step(opt)
+    st = jnp.int32(0)
+
+    def step(params=params, state=state, st=st, fn=fn):
+        return fn(params, state, st, batch)
+
+    us = timeit(step, iters=5 if quick else 10, warmup=2)
+    mem = fn.lower(params, state, st, batch).compile().memory_analysis()
+    return us, getattr(mem, "temp_size_in_bytes", 0)
+
+
+def run(quick: bool = False, arch: str = "gpt-oss-120b"):
+    cfg, batch = _bench_cfg(arch, quick)
+    mesh = make_local_mesh(1, 1)
     out = {}
     base = None
     for mode in MODES:
-        model = build_model(cfg)
-        rt = FSDPRuntime(model, mesh, planner=mode, donate=False)
-        params = rt.init_params(0)
-        opt = make_optimizer(cfg)
-        state = opt.init(rt)
-        fn = rt.make_train_step(opt)
-        st = jnp.int32(0)
-
-        def step(params=params, state=state, st=st, fn=fn):
-            return fn(params, state, st, batch)
-
-        us = timeit(step, iters=5 if quick else 10, warmup=2)
-        # memory: compile the step and read temp bytes
-        lowered = fn.lower(params, state, st, batch)
-        mem = lowered.compile().memory_analysis()
-        temp = getattr(mem, "temp_size_in_bytes", 0)
+        rt = FSDPRuntime(build_model(cfg), mesh, planner=mode, donate=False)
+        us, temp = _measure_step(cfg, rt, batch, quick)
         pad = {n: lo.plan.padding_ratio for n, lo in rt.layouts.items()}
         tok_s = 8 * 128 / (us / 1e6)
         if base is None:
@@ -67,5 +74,38 @@ def run(quick: bool = False, arch: str = "gpt-oss-120b"):
     return out
 
 
+def run_schedules(quick: bool = False, arch: str = "gpt-oss-120b"):
+    """Per-CommSchedule step time + temp memory on the ragged planner: the
+    cost/benefit of prefetch double-buffering, skipping reshard, and wire/
+    reduce dtype choices (all numerically identical on one device)."""
+    cfg, batch = _bench_cfg(arch, quick)
+    mesh = make_local_mesh(1, 1)
+    out = {}
+    base = None
+    # measure "default" first so the speedup ratio really is vs. default,
+    # whatever order VARIANTS declares
+    order = ["default"] + [k for k in VARIANTS if k != "default"]
+    for name in order:
+        sched = VARIANTS[name]
+        rt = FSDPRuntime(build_model(cfg), mesh, schedule=sched,
+                         donate=False)
+        us, temp = _measure_step(cfg, rt, batch, quick)
+        if base is None:
+            base = us
+        out[name] = (us, temp)
+        emit(f"sched/{arch}/{name}/step", us,
+             f"temp_mb={temp/1e6:.1f};speedup_vs_default={base/us:.3f};"
+             f"{sched.describe().replace(' ', ';')}")
+    return out
+
+
 if __name__ == "__main__":
-    run()
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--schedule", action="store_true",
+                    help="benchmark CommSchedule variants instead of planners")
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--arch", default="gpt-oss-120b")
+    a = ap.parse_args()
+    (run_schedules if a.schedule else run)(quick=a.quick, arch=a.arch)

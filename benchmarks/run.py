@@ -24,6 +24,7 @@ def main() -> None:
         ("table1_copy_overhead", bench_copy_overhead.run),
         ("fig11_planner", bench_planner.run),
         ("fig8_e2e", bench_e2e.run),
+        ("sched_e2e", bench_e2e.run_schedules),
         ("fig9_scaling", bench_scaling.run),
         ("table2_ablation", bench_ablation.run),
         ("kernels", bench_kernels.run),

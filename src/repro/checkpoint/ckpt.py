@@ -15,6 +15,7 @@ import pathlib
 import jax
 import numpy as np
 
+from ..compat import tree_flatten_with_path, tree_unflatten
 from ..core.ragged import checkpoint_index
 
 
@@ -38,7 +39,7 @@ def save(path, runtime, params, opt_state=None, step: int = 0):
     (path / "meta.json").write_text(json.dumps(meta, indent=1))
     arrays = {f"param__{k}": np.asarray(v) for k, v in params.items()}
     if opt_state is not None:
-        flat, _ = jax.tree.flatten_with_path(opt_state)
+        flat, _ = tree_flatten_with_path(opt_state)
         for kp, v in flat:
             key = "opt__" + "__".join(
                 getattr(p, "key", str(p)) for p in kp)
@@ -73,12 +74,12 @@ def load(path, runtime, opt_state_like=None):
             buf, NamedSharding(runtime.mesh, lo.pspec()))
     out = [params, int(meta["step"])]
     if opt_state_like is not None:
-        flat, tree = jax.tree.flatten_with_path(opt_state_like)
+        flat, tree = tree_flatten_with_path(opt_state_like)
         restored = []
         for kp, like in flat:
             key = "opt__" + "__".join(getattr(p, "key", str(p)) for p in kp)
             restored.append(jax.device_put(data[key], like.sharding))
-        out.append(jax.tree.unflatten(tree, restored))
+        out.append(tree_unflatten(tree, restored))
     return tuple(out)
 
 

@@ -1,0 +1,110 @@
+"""JAX version-abstraction layer: the ONLY module allowed to touch
+version-specific JAX symbols.
+
+The runtime targets every JAX from 0.4.3x (installed here: 0.4.37, where
+``shard_map`` lives in ``jax.experimental.shard_map`` and takes
+``check_rep``) through current releases (``jax.shard_map`` with
+``check_vma``, meshes built with ``axis_types``).  Everything else in the
+repo imports these wrappers:
+
+  * ``shard_map(f, mesh=..., in_specs=..., out_specs=..., check=False)``
+  * ``make_mesh(axis_shapes, axis_names)`` -- tries the ``axis_types``
+    (explicit-sharding-era) API first, falls back to plain ``jax.make_mesh``
+    and finally to ``mesh_utils`` + ``Mesh``
+  * ``tree_flatten_with_path`` / ``tree_unflatten`` -- ``jax.tree`` grew
+    ``flatten_with_path`` after 0.4.37; older code spells it
+    ``jax.tree_util.tree_flatten_with_path``.  (Plain ``jax.tree.map`` /
+    ``leaves`` exist on every supported version and are used directly.)
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+
+# --------------------------------------------------------------------------- #
+# shard_map
+# --------------------------------------------------------------------------- #
+_new_shard_map = getattr(jax, "shard_map", None)
+if _new_shard_map is None:
+    from jax.experimental.shard_map import shard_map as _impl_shard_map
+else:
+    _impl_shard_map = _new_shard_map
+
+# the replication-check kwarg was renamed check_rep -> check_vma after the
+# top-level jax.shard_map export appeared, so key on the actual signature
+# rather than on where the function lives
+try:
+    import inspect as _inspect
+
+    _CHECK_KW = ("check_vma"
+                 if "check_vma" in _inspect.signature(
+                     _impl_shard_map).parameters
+                 else "check_rep")
+except (TypeError, ValueError):  # C-accelerated wrapper: assume current API
+    _CHECK_KW = "check_vma"
+
+
+def shard_map(f: Callable, *, mesh, in_specs, out_specs,
+              check: bool = False) -> Callable:
+    """Portable shard_map.  ``check`` maps to ``check_vma`` on new JAX and
+    ``check_rep`` on old JAX (both default False here: the runtime uses
+    untraceable-replication collectives like psum_scatter)."""
+    return _impl_shard_map(f, mesh=mesh, in_specs=in_specs,
+                           out_specs=out_specs, **{_CHECK_KW: check})
+
+
+# --------------------------------------------------------------------------- #
+# mesh construction
+# --------------------------------------------------------------------------- #
+def make_mesh(axis_shapes: tuple[int, ...], axis_names: tuple[str, ...],
+              *, devices=None):
+    """Build a Mesh on any JAX version.
+
+    New JAX wants every axis marked ``AxisType.Auto`` so shard_map +
+    NamedSharding keep their classic semantics; old JAX has no axis types
+    (everything is implicitly auto)."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        try:
+            return jax.make_mesh(
+                axis_shapes, axis_names,
+                axis_types=(axis_type.Auto,) * len(axis_names),
+                devices=devices,
+            )
+        except TypeError:  # make_mesh predates axis_types kwarg
+            pass
+    if hasattr(jax, "make_mesh"):
+        return jax.make_mesh(axis_shapes, axis_names, devices=devices)
+    from jax.experimental import mesh_utils
+
+    devs = mesh_utils.create_device_mesh(axis_shapes, devices=devices)
+    return jax.sharding.Mesh(devs, axis_names)
+
+
+# --------------------------------------------------------------------------- #
+# compiled-artifact introspection
+# --------------------------------------------------------------------------- #
+def cost_analysis(compiled) -> dict:
+    """``Compiled.cost_analysis()`` returns a one-element list of dicts on
+    JAX 0.4.x and a plain dict on newer releases; normalize to a dict."""
+    ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca)
+
+
+# --------------------------------------------------------------------------- #
+# tree utilities
+# --------------------------------------------------------------------------- #
+def tree_flatten_with_path(tree: Any):
+    t = getattr(jax, "tree", None)
+    if t is not None and hasattr(t, "flatten_with_path"):
+        return t.flatten_with_path(tree)
+    return jax.tree_util.tree_flatten_with_path(tree)
+
+
+def tree_unflatten(treedef, leaves):
+    if hasattr(jax, "tree"):
+        return jax.tree.unflatten(treedef, leaves)
+    return jax.tree_util.tree_unflatten(treedef, leaves)

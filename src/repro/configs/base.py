@@ -30,6 +30,13 @@ class ParallelConfig:
     sequence_parallel: bool = False  # shard activations over "model" (w/ tp)
     microbatches: int = 1    # gradient accumulation chunks
 
+    # --- communication schedule (core.schedule.CommSchedule) ----------------
+    prefetch: bool = False            # double-buffer layer all-gathers
+    reshard_after_forward: bool = True  # drop gathered params after fwd (remat)
+    keep_last_gathered: bool = False  # last layer's gathered params stay live
+    gather_dtype: Optional[str] = None  # all-gather wire dtype (None=compute)
+    reduce_dtype: Optional[str] = None  # grad reduce-scatter dtype (None=wire)
+
     def __post_init__(self):
         # TP shards activations over "model", so parameters can't also be
         # ZeRO-sharded over it.  EP is fine: the runtime strips "model" from

@@ -29,10 +29,12 @@ import numpy as np
 from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from ..compat import shard_map
 from ..models.transformer import GroupDef
 from .dbuffer import DBuffer
 from .planner import PLANNERS, plan_group
 from .ragged import LANE, ShardDim, TensorSpec, compose_granularity
+from .schedule import CommSchedule, sharded_gather
 
 
 # ---------------------------------------------------------------------------
@@ -68,7 +70,7 @@ class GroupLayout:
 class FSDPRuntime:
     def __init__(self, model, mesh: Mesh, *, planner: str = "ragged",
                  compute_dtype=jnp.bfloat16, donate: bool = True,
-                 scan_unroll: int = 1):
+                 scan_unroll: int = 1, schedule: CommSchedule | None = None):
         self.model = model
         self.cfg = model.cfg
         self.mesh = mesh
@@ -76,6 +78,8 @@ class FSDPRuntime:
         self.compute_dtype = compute_dtype
         self.donate = donate
         self.scan_unroll = scan_unroll  # cost-calibration dry runs unroll
+        self.schedule = (schedule if schedule is not None
+                         else CommSchedule.from_config(self.cfg))
 
         par = self.cfg.parallel
         axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
@@ -277,12 +281,11 @@ class FSDPRuntime:
                 return new_params, new_opt, metrics
 
             opt_specs = optimizer.pspecs(self)
-            fn = jax.shard_map(
+            fn = shard_map(
                 sharded, mesh=self.mesh,
                 in_specs=(pspecs, opt_specs, P(), self.batch_pspec(batch)),
                 out_specs=(pspecs, opt_specs,
                            {"loss": P(), "tokens": P(), "grad_norm": P()}),
-                check_vma=False,
             )
             new_params, new_opt, metrics = fn(params, opt_state, step, batch)
             return new_params, new_opt, step + 1, metrics
@@ -341,13 +344,12 @@ class FSDPRuntime:
                 pg = self._getter(params, remat=False)
                 return self.model.prefill(pg, batch, cache)
 
-            fn = jax.shard_map(
+            fn = shard_map(
                 sharded, mesh=self.mesh,
                 in_specs=(pspecs, self.batch_pspec(batch), cspec),
                 out_specs=(self.batch_pspec(
                     {"tokens": jax.ShapeDtypeStruct((bsz, 1, 1), jnp.float32)}
                 )["tokens"], cspec),
-                check_vma=False,
             )
             return fn(params, batch, cache)
 
@@ -367,13 +369,12 @@ class FSDPRuntime:
                 pg = self._getter(params, remat=False)
                 return self.model.decode(pg, batch, cache, index)
 
-            fn = jax.shard_map(
+            fn = shard_map(
                 sharded, mesh=self.mesh,
                 in_specs=(pspecs, self.batch_pspec(batch), cspec, idx_spec),
                 out_specs=(self.batch_pspec(
                     {"tokens": jax.ShapeDtypeStruct((bsz, 1, 1), jnp.float32)}
                 )["tokens"], cspec),
-                check_vma=False,
             )
             return fn(params, batch, cache, index)
 
@@ -396,7 +397,7 @@ def _global_norm(runtime, grads):
 
 
 # ---------------------------------------------------------------------------
-# ParamGetter: gather + zero-copy unpack, layer scan with remat
+# ParamGetter: gather + zero-copy unpack, layer scan driven by CommSchedule
 # ---------------------------------------------------------------------------
 
 class _ParamGetter:
@@ -404,32 +405,125 @@ class _ParamGetter:
         self.rt = runtime
         self.bufs = bufs
         self.remat = remat
+        self.schedule = runtime.schedule
         self.tp_axis = runtime.tp_axis
         self.ep_axis = runtime.ep_axis
         self.compute_dtype = runtime.compute_dtype
 
-    def _gather_unpack(self, name: str, local: jax.Array):
+    def _gather_flat(self, name: str, local: jax.Array) -> jax.Array:
+        """All-gather one group buffer per the schedule's wire/reduce dtypes
+        (backward = the ZeRO-3 gradient reduce-scatter)."""
         lo = self.rt.layouts[name]
-        x = local.astype(self.rt.compute_dtype)  # bf16 on the wire
-        if lo.fsdp_axes:
-            x = lax.all_gather(x, lo.fsdp_axes, tiled=True)
-        return lo.buffer.unpack(x)
+        sched = self.schedule
+        cd = jnp.dtype(self.rt.compute_dtype)
+        return sharded_gather(
+            local, lo.fsdp_axes, sched.wire_dtype(cd), sched.accum_dtype(cd),
+            cd, jnp.dtype(local.dtype))
+
+    def _gather_unpack(self, name: str, local: jax.Array):
+        return self.rt.layouts[name].buffer.unpack(
+            self._gather_flat(name, local))
 
     def globals(self, group: str) -> dict[str, jax.Array]:
         return self._gather_unpack(group, self.bufs[group])
 
     def scan(self, groups, body, carry, xs=None):
+        """FSDP layer scan.  The CommSchedule controls gather prefetching,
+        whether gathered params are resharded after forward, and whether
+        the last layer's gathered params stay live into backward.
+
+        Remat structure: activation rematerialization (``self.remat``) and
+        parameter resharding (``schedule.reshard_after_forward``) are
+        orthogonal.  Resharding puts the gather *inside* the checkpointed
+        region (backward re-gathers = ZeRO-3); with resharding off, the
+        gather moves outside so the gathered buffer is saved as a residual
+        while layer activations are still rematted."""
+        sched = self.schedule
         stacks = tuple(self.bufs[g] for g in groups)
-
-        def scan_body(carry, scan_xs):
-            layer_bufs, user_xs = scan_xs
-            p = {}
-            for g, lb in zip(groups, layer_bufs):
-                p.update(self._gather_unpack(g, lb))
-            return body(p, carry, user_xs)
-
-        if self.remat:
-            scan_body = jax.checkpoint(scan_body)
         n = self.rt.layouts[groups[0]].n_layers
-        return lax.scan(scan_body, carry, (stacks, xs), length=n,
-                        unroll=min(self.rt.scan_unroll, n))
+        remat = self.remat
+        reshard = sched.reshard_after_forward
+        split_last = bool(sched.keep_last_gathered and remat and reshard
+                          and n >= 2)
+        m = n - 1 if split_last else n
+
+        def gather_layer(layer_bufs):
+            return tuple(self._gather_flat(g, lb)
+                         for g, lb in zip(groups, layer_bufs))
+
+        def unpack_all(gathered):
+            p = {}
+            for g, gb in zip(groups, gathered):
+                p.update(self.rt.layouts[g].buffer.unpack(gb))
+            return p
+
+        def compute(gathered, c, user_xs):
+            return body(unpack_all(gathered), c, user_xs)
+
+        # activation-only remat: gathered buffers enter as checkpoint
+        # inputs, so they are saved into backward (no re-gather)
+        inner = (jax.checkpoint(compute) if remat and not reshard
+                 else compute)
+
+        main_stacks = tuple(s[:m] for s in stacks) if split_last else stacks
+        xs_main = jax.tree.map(lambda t: t[:m], xs) if split_last else xs
+        unroll = max(1, min(self.rt.scan_unroll, m))
+
+        if sched.prefetch and m >= 2:
+            # double-buffer: layer k+1's all-gather is issued before layer
+            # k's compute; the gathered buffer rides in the scan carry so
+            # XLA can overlap the gather with the previous layer's compute
+            idxs = jnp.arange(m, dtype=jnp.int32)
+            g0 = gather_layer(tuple(s[0] for s in main_stacks))
+
+            def scan_body(c, scan_xs):
+                i, user_xs = scan_xs
+                user_carry, cur = c
+                # last iteration has nothing to prefetch: reuse `cur`
+                # instead of issuing a wasted layer-sized all-gather
+                nxt = lax.cond(
+                    i + 1 < m,
+                    lambda cur: gather_layer(tuple(
+                        lax.dynamic_index_in_dim(
+                            s, jnp.minimum(i + 1, m - 1), keepdims=False)
+                        for s in main_stacks)),
+                    lambda cur: cur,
+                    cur)
+                user_carry, y = inner(cur, user_carry, user_xs)
+                return (user_carry, nxt), y
+
+            if remat and reshard:
+                scan_body = jax.checkpoint(scan_body)
+            (carry, _), ys = lax.scan(scan_body, (carry, g0),
+                                      (idxs, xs_main), length=m,
+                                      unroll=unroll)
+        elif m:
+            def scan_body(c, scan_xs):
+                layer_bufs, user_xs = scan_xs
+                return inner(gather_layer(layer_bufs), c, user_xs)
+
+            if remat and reshard:
+                scan_body = jax.checkpoint(scan_body)
+            carry, ys = lax.scan(scan_body, carry, (main_stacks, xs_main),
+                                 length=m, unroll=unroll)
+        else:
+            ys = None
+
+        if split_last:
+            # last layer: gather outside the checkpointed compute -- its
+            # gathered params are saved into backward (first to be needed
+            # there), skipping one re-gather, as in FSDP2's skip-reshard-
+            # last-block policy; activations still remat
+            last_inner = jax.checkpoint(compute)
+
+            def last_body(c, scan_xs):
+                layer_bufs, user_xs = scan_xs
+                return last_inner(gather_layer(layer_bufs), c, user_xs)
+
+            carry, y_last = lax.scan(
+                last_body, carry,
+                (tuple(s[m:] for s in stacks),
+                 jax.tree.map(lambda t: t[m:], xs)), length=1)
+            ys = jax.tree.map(
+                lambda a, b: jnp.concatenate([a, b], axis=0), ys, y_last)
+        return carry, ys

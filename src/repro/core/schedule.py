@@ -1,0 +1,161 @@
+"""CommSchedule: the FSDP runtime's communication schedule, made explicit.
+
+The seed runtime hard-coded its collective behavior inside the layer scan:
+all-gather the current layer in bf16, remat everything (so backward
+re-gathers every layer), and let autodiff pick the gradient reduce-scatter
+dtype.  This module turns each of those decisions into a policy knob,
+mirroring the ``fully_shard(reshard_after_forward=..., mp_policy=...)``
+surface of production FSDP:
+
+  * ``prefetch``       -- double-buffer layer all-gathers inside the scan:
+                          layer k+1's gather is issued *before* layer k's
+                          compute, so XLA's latency-hiding scheduler can
+                          overlap communication with compute.  Costs one
+                          extra gathered layer buffer carried through the
+                          scan (classic FSDP double-buffering).
+  * ``reshard_after_forward`` -- True (default): gathered parameters are
+                          dropped after each layer's forward and re-gathered
+                          in backward (ZeRO-3).  False keeps every layer's
+                          gathered parameters live into backward (no
+                          backward re-gather, more memory).  Orthogonal to
+                          activation remat, which stays on either way: with
+                          resharding off, only the gather moves outside the
+                          checkpointed region.
+  * ``keep_last_gathered``    -- run the *last* layer un-rematted even when
+                          resharding: its gathered parameters stay live into
+                          backward, where they are needed first (FSDP2 skips
+                          resharding the final block for the same reason).
+  * ``gather_dtype``   -- wire dtype of the parameter all-gather
+                          ("bf16"/"fp32"; None = the runtime compute dtype).
+  * ``reduce_dtype``   -- accumulate dtype of the gradient reduce-scatter
+                          ("bf16"/"fp32"; None = same as the wire dtype).
+                          fp32 trades 2x reduce bandwidth for exact
+                          accumulation across large FSDP groups.
+
+``sharded_gather`` is the one primitive the runtime gathers parameters
+through: forward = cast-to-wire + all-gather, backward = cast-to-reduce +
+psum-scatter (the ZeRO-3 gradient reduce-scatter).  With default dtypes its
+VJP is op-for-op the autodiff transpose of the seed's
+``astype(bf16); all_gather``, so the default schedule is bitwise identical
+to the pre-schedule runtime.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+_DTYPES = {
+    "bf16": jnp.bfloat16,
+    "bfloat16": jnp.bfloat16,
+    "fp32": jnp.float32,
+    "f32": jnp.float32,
+    "float32": jnp.float32,
+}
+
+
+def _resolve(name: str | None, default):
+    if name is None:
+        return jnp.dtype(default)
+    try:
+        return jnp.dtype(_DTYPES[name])
+    except KeyError:
+        raise ValueError(
+            f"unknown schedule dtype {name!r}; expected one of "
+            f"{sorted(_DTYPES)}") from None
+
+
+@dataclasses.dataclass(frozen=True)
+class CommSchedule:
+    prefetch: bool = False
+    reshard_after_forward: bool = True
+    keep_last_gathered: bool = False
+    gather_dtype: str | None = None
+    reduce_dtype: str | None = None
+
+    def __post_init__(self):
+        # fail at construction, not at first trace
+        _resolve(self.gather_dtype, jnp.bfloat16)
+        _resolve(self.reduce_dtype, jnp.bfloat16)
+
+    @classmethod
+    def default(cls) -> "CommSchedule":
+        return cls()
+
+    @classmethod
+    def from_config(cls, cfg) -> "CommSchedule":
+        par = cfg.parallel
+        return cls(
+            prefetch=par.prefetch,
+            reshard_after_forward=par.reshard_after_forward,
+            keep_last_gathered=par.keep_last_gathered,
+            gather_dtype=par.gather_dtype,
+            reduce_dtype=par.reduce_dtype,
+        )
+
+    def wire_dtype(self, compute_dtype) -> jnp.dtype:
+        return _resolve(self.gather_dtype, compute_dtype)
+
+    def accum_dtype(self, compute_dtype) -> jnp.dtype:
+        return _resolve(self.reduce_dtype, self.wire_dtype(compute_dtype))
+
+    def describe(self) -> str:
+        return (f"prefetch={int(self.prefetch)} "
+                f"reshard={int(self.reshard_after_forward)} "
+                f"keep_last={int(self.keep_last_gathered)} "
+                f"gather={self.gather_dtype or 'compute'} "
+                f"reduce={self.reduce_dtype or 'wire'}")
+
+
+# Named variants used by tests/benchmarks (parity: all must match default
+# bitwise on one device; multi-device dtype variants differ only on the wire).
+VARIANTS: dict[str, CommSchedule] = {
+    "default": CommSchedule(),
+    "prefetch": CommSchedule(prefetch=True),
+    "no_reshard": CommSchedule(reshard_after_forward=False),
+    "keep_last": CommSchedule(keep_last_gathered=True),
+    "fp32_wire": CommSchedule(gather_dtype="fp32"),
+    "fp32_reduce": CommSchedule(reduce_dtype="fp32"),
+    "overlap_all": CommSchedule(prefetch=True, keep_last_gathered=True,
+                                reduce_dtype="fp32"),
+}
+
+
+# --------------------------------------------------------------------------- #
+# the gather/reduce-scatter primitive
+# --------------------------------------------------------------------------- #
+@partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4, 5))
+def sharded_gather(x, axes, wire_dtype, reduce_dtype, out_dtype, param_dtype):
+    """All-gather ``x`` (a device-local flat buffer slice, leading axis
+    tiled) over the FSDP mesh ``axes``.
+
+    forward:  cast to ``wire_dtype`` -> all_gather -> cast to ``out_dtype``
+    backward: cast cotangent to ``reduce_dtype`` -> psum_scatter (the ZeRO-3
+              gradient reduce-scatter) -> cast to ``param_dtype``
+    """
+    y = x.astype(wire_dtype)
+    if axes:
+        y = lax.all_gather(y, axes, tiled=True)
+    return y.astype(out_dtype)
+
+
+def _gather_fwd(x, axes, wire_dtype, reduce_dtype, out_dtype, param_dtype):
+    return (
+        sharded_gather(x, axes, wire_dtype, reduce_dtype, out_dtype,
+                       param_dtype),
+        None,
+    )
+
+
+def _gather_bwd(axes, wire_dtype, reduce_dtype, out_dtype, param_dtype,
+                _res, ct):
+    g = ct.astype(reduce_dtype)
+    if axes:
+        g = lax.psum_scatter(g, axes, scatter_dimension=0, tiled=True)
+    return (g.astype(param_dtype),)
+
+
+sharded_gather.defvjp(_gather_fwd, _gather_bwd)

@@ -84,9 +84,10 @@ def _compile(cfg, shape, mesh, planner, unroll=1):
 
 
 def _costs(compiled):
+    from ..compat import cost_analysis
     from .roofline import parse_collectives
 
-    ca = compiled.cost_analysis() or {}
+    ca = cost_analysis(compiled)
     st = parse_collectives(compiled.as_text())
     return (float(ca.get("flops", 0.0)),
             float(ca.get("bytes accessed", 0.0)),
@@ -137,8 +138,10 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
     t_full = time.time() - t0
     mem = compiled.memory_analysis()
     if not quiet:
+        from ..compat import cost_analysis
+
         print(mem)
-        ca = compiled.cost_analysis() or {}
+        ca = cost_analysis(compiled)
         print({k: v for k, v in ca.items() if k in ("flops", "bytes accessed")})
 
     f_full, b_full, c_full, counts = _costs(compiled)

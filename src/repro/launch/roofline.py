@@ -23,6 +23,7 @@ import re
 
 import numpy as np
 
+from ..compat import cost_analysis
 from .mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
 
 _DTYPE_BYTES = {
@@ -213,7 +214,7 @@ class Roofline:
 
 def analyze(compiled, *, arch, shape_cfg, mesh_name, chips, cfg,
             note="") -> Roofline:
-    cost = compiled.cost_analysis() or {}
+    cost = cost_analysis(compiled)
     mem = compiled.memory_analysis()
     stats = parse_collectives(compiled.as_text())
     return Roofline(

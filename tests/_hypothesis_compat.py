@@ -1,0 +1,146 @@
+"""Property-testing shim: real hypothesis when installed, fixed-seed
+example sampling otherwise.
+
+Tests import ``given``/``settings``/``st`` from here instead of from
+``hypothesis`` directly.  With hypothesis installed the tests stay fully
+property-based (shrinking, database, the works); without it, ``@given``
+replays ``max_examples`` deterministic samples drawn from a seed derived
+from the test name -- no shrinking, but the same strategy surface, so the
+suite runs on a bare ``pip install jax pytest`` image.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies  # noqa: F401
+    from hypothesis import strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import functools
+    import inspect
+    import math
+    import random
+    import types
+    import zlib
+
+    _DEFAULT_MAX_EXAMPLES = 20
+
+    class _Strategy:
+        """A sampler: ``sample(rng) -> value``."""
+
+        def __init__(self, sample):
+            self._sample = sample
+
+        def sample(self, rng: random.Random):
+            return self._sample(rng)
+
+        def map(self, f):
+            return _Strategy(lambda rng: f(self._sample(rng)))
+
+        def filter(self, pred):
+            def sample(rng):
+                for _ in range(10_000):
+                    v = self._sample(rng)
+                    if pred(v):
+                        return v
+                raise ValueError("filter predicate never satisfied")
+
+            return _Strategy(sample)
+
+    def _integers(min_value, max_value):
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    def _floats(min_value, max_value, **_kw):
+        # log-uniform over positive ranges (hypothesis explores magnitudes,
+        # plain uniform over e.g. (1e-8, 1e4) would never sample small)
+        if min_value > 0 and max_value / min_value > 1e3:
+            lo, hi = math.log(min_value), math.log(max_value)
+            return _Strategy(lambda rng: math.exp(rng.uniform(lo, hi)))
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    def _booleans():
+        return _Strategy(lambda rng: rng.random() < 0.5)
+
+    def _just(value):
+        return _Strategy(lambda rng: value)
+
+    def _sampled_from(elements):
+        elements = list(elements)
+        return _Strategy(lambda rng: rng.choice(elements))
+
+    def _one_of(*strats):
+        return _Strategy(lambda rng: rng.choice(strats).sample(rng))
+
+    def _lists(elements, min_size=0, max_size=10, **_kw):
+        def sample(rng):
+            n = rng.randint(min_size, max_size)
+            return [elements.sample(rng) for _ in range(n)]
+
+        return _Strategy(sample)
+
+    def _tuples(*strats):
+        return _Strategy(lambda rng: tuple(s.sample(rng) for s in strats))
+
+    def _composite(f):
+        @functools.wraps(f)
+        def builder(*args, **kwargs):
+            def sample(rng):
+                return f(lambda s: s.sample(rng), *args, **kwargs)
+
+            return _Strategy(sample)
+
+        return builder
+
+    strategies = types.SimpleNamespace(
+        integers=_integers,
+        floats=_floats,
+        booleans=_booleans,
+        just=_just,
+        sampled_from=_sampled_from,
+        one_of=_one_of,
+        lists=_lists,
+        tuples=_tuples,
+        composite=_composite,
+    )
+    st = strategies
+
+    class settings:  # noqa: N801 -- mirrors hypothesis' decorator name
+        def __init__(self, max_examples=_DEFAULT_MAX_EXAMPLES, deadline=None,
+                     **_kw):
+            self.max_examples = max_examples
+
+        def __call__(self, f):
+            f._compat_settings = self
+            return f
+
+    def given(*strats, **kwstrats):
+        def decorator(f):
+            # like hypothesis, drawn args fill the rightmost positional
+            # parameters; anything left of them is a pytest fixture
+            params = list(inspect.signature(f).parameters.values())
+            drawn_names = [p.name for p in params[len(params) - len(strats):]]
+
+            @functools.wraps(f)
+            def wrapper(*args, **kwargs):
+                cfg = getattr(wrapper, "_compat_settings", None)
+                n = cfg.max_examples if cfg else _DEFAULT_MAX_EXAMPLES
+                rng = random.Random(zlib.crc32(f.__qualname__.encode()))
+                for _ in range(n):
+                    # bind drawn values by name: fixtures arrive in kwargs,
+                    # so positional splicing would mis-assign them
+                    kdrawn = {k: s.sample(rng)
+                              for k, s in zip(drawn_names, strats)}
+                    kdrawn.update(
+                        (k, s.sample(rng)) for k, s in kwstrats.items())
+                    f(*args, **kwargs, **kdrawn)
+
+            # hide the drawn parameters from pytest's fixture resolution
+            keep = params[: len(params) - len(strats)]
+            keep = [p for p in keep if p.name not in kwstrats]
+            del wrapper.__wrapped__
+            wrapper.__signature__ = inspect.Signature(keep)
+            return wrapper
+
+        return decorator

@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.dbuffer import DBuffer
 from repro.core.planner import plan_fsdp2, plan_group, plan_megatron, plan_naive

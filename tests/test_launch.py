@@ -8,7 +8,7 @@ import sys
 import textwrap
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.ragged import ShardDim, TensorSpec, compose_granularity
 from repro.launch.roofline import parse_collectives

@@ -24,6 +24,7 @@ _DRIVER = textwrap.dedent("""
     from repro.configs import get_config, build_model
     from repro.configs.base import ParallelConfig
     from repro.core.fsdp import FSDPRuntime
+    from repro.core.schedule import VARIANTS
     from repro.optim import make_optimizer
     from repro.launch.mesh import make_local_mesh
 
@@ -38,9 +39,9 @@ _DRIVER = textwrap.dedent("""
             b["frames"] = jnp.asarray(rng.normal(size=(B, cfg.n_frames, cfg.d_model)), jnp.bfloat16)
         return b
 
-    def run(cfg, mesh, steps=2):
+    def run(cfg, mesh, steps=2, planner="ragged", schedule=None):
         model = build_model(cfg)
-        rt = FSDPRuntime(model, mesh)
+        rt = FSDPRuntime(model, mesh, planner=planner, schedule=schedule)
         params = rt.init_params(0)
         opt = make_optimizer(cfg)
         ostate = opt.init(rt)
@@ -104,6 +105,19 @@ _DRIVER = textwrap.dedent("""
         tst = dataclasses.replace(cfg, parallel=ParallelConfig(
             ("data",), ("data",), microbatches=4))
         tst_losses, _ = run(tst, make_local_mesh(2, 1))
+    elif scenario.startswith("sched_"):
+        # overlap schedule (prefetch + keep-last + fp32 reduce) over 8-way
+        # FSDP == default schedule, per planner layout; only the wire/reduce
+        # precision differs across devices.  4 layers so the prefetch path
+        # (scan length >= 2 after the keep-last split) really runs
+        planner = scenario.removeprefix("sched_")
+        cfg = get_config("qwen2.5-14b").reduced()
+        cfg = dataclasses.replace(cfg, n_layers=4)
+        base = dataclasses.replace(cfg, parallel=ParallelConfig(("data",), ("data",)))
+        ref_losses, _ = run(base, make_local_mesh(8, 1), planner=planner,
+                            schedule=VARIANTS["default"])
+        tst_losses, _ = run(base, make_local_mesh(8, 1), planner=planner,
+                            schedule=VARIANTS["overlap_all"])
     else:
         raise SystemExit(f"unknown scenario {scenario}")
 
@@ -126,7 +140,8 @@ def _run(scenario: str):
 
 @pytest.mark.slow
 @pytest.mark.parametrize("scenario", ["fsdp8", "hsdp", "tp", "tp_sp", "ep",
-                                      "micro", "shampoo"])
+                                      "micro", "shampoo", "sched_ragged",
+                                      "sched_fsdp2"])
 def test_parallel_equivalence(scenario):
     ref, tst = _run(scenario)
     for r, t in zip(ref, tst):

@@ -7,6 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.compat import shard_map
 from repro.configs import build_model, get_config
 from repro.core.fsdp import FSDPRuntime
 from repro.launch.mesh import make_local_mesh
@@ -107,9 +108,8 @@ def test_wd_mask_matches_plan():
         return matrix_mask_local(rt, lo, (lo.plan.shard_size,))
 
     mask = np.asarray(
-        jax.shard_map(get_mask, mesh=rt.mesh, in_specs=(),
-                      out_specs=jax.sharding.PartitionSpec(None),
-                      check_vma=False)())
+        shard_map(get_mask, mesh=rt.mesh, in_specs=(),
+                  out_specs=jax.sharding.PartitionSpec(None))())
     # host oracle
     want = np.zeros(lo.plan.shard_size, np.float32)
     for p in lo.plan.placements:
