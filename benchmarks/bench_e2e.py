@@ -76,8 +76,11 @@ def run(quick: bool = False, arch: str = "gpt-oss-120b"):
 
 def run_schedules(quick: bool = False, arch: str = "gpt-oss-120b"):
     """Per-CommSchedule step time + temp memory on the ragged planner: the
-    cost/benefit of prefetch double-buffering, skipping reshard, and wire/
-    reduce dtype choices (all numerically identical on one device)."""
+    cost/benefit of prefetch double-buffering, ring vs xla gathers,
+    skipping reshard, and wire/reduce dtype choices (all numerically
+    identical on one device).  ``gathered_peak_mb`` is the analytic peak of
+    live gathered layer buffers -- the quantity the two-slot prefetch
+    bounds at 2 per depth (the retention bug made it n_layers)."""
     cfg, batch = _bench_cfg(arch, quick)
     mesh = make_local_mesh(1, 1)
     out = {}
@@ -94,7 +97,9 @@ def run_schedules(quick: bool = False, arch: str = "gpt-oss-120b"):
             base = us
         out[name] = (us, temp)
         emit(f"sched/{arch}/{name}/step", us,
-             f"temp_mb={temp/1e6:.1f};speedup_vs_default={base/us:.3f};"
+             f"temp_mb={temp/1e6:.1f};"
+             f"gathered_peak_mb={rt.gathered_peak_bytes()/1e6:.2f};"
+             f"speedup_vs_default={base/us:.3f};"
              f"{sched.describe().replace(' ', ';')}")
     return out
 

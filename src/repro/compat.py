@@ -83,6 +83,55 @@ def make_mesh(axis_shapes: tuple[int, ...], axis_names: tuple[str, ...],
 
 
 # --------------------------------------------------------------------------- #
+# differentiable optimization barrier
+# --------------------------------------------------------------------------- #
+# ``lax.optimization_barrier`` exists on every supported JAX but only grew
+# autodiff rules after 0.4.37; this wrapper barriers the cotangents itself
+# so it differentiates everywhere.  The runtime uses it to force value
+# materialization at layer seams inside fused scan bodies (XLA's bf16 pass
+# may otherwise keep wider intermediates across the seam, changing bf16
+# roundings vs a per-layer scan-iteration boundary).
+_lax_barrier = jax.lax.optimization_barrier
+
+
+def _barrier_inexact(tree):
+    """Barrier inexact leaves; pass ints/float0 cotangents through (XLA's
+    optimization_barrier rejects float0, and integer leaves don't carry
+    numerics worth pinning)."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    f0 = jax.dtypes.float0
+    keep = [jnp_issubdtype_inexact(l) and getattr(l, "dtype", None) != f0
+            for l in leaves]
+    picked = [l for l, k in zip(leaves, keep) if k]
+    barriered = iter(_lax_barrier(picked) if picked else ())
+    out = [next(barriered) if k else l for l, k in zip(leaves, keep)]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def jnp_issubdtype_inexact(x) -> bool:
+    import jax.numpy as _jnp
+
+    dt = getattr(x, "dtype", None)
+    return dt is not None and _jnp.issubdtype(dt, _jnp.inexact)
+
+
+@jax.custom_vjp
+def optimization_barrier(tree):
+    return _barrier_inexact(tree)
+
+
+def _ob_fwd(tree):
+    return _barrier_inexact(tree), None
+
+
+def _ob_bwd(_res, ct):
+    return (_barrier_inexact(ct),)
+
+
+optimization_barrier.defvjp(_ob_fwd, _ob_bwd)
+
+
+# --------------------------------------------------------------------------- #
 # compiled-artifact introspection
 # --------------------------------------------------------------------------- #
 def cost_analysis(compiled) -> dict:

@@ -8,7 +8,7 @@ d_model<=512, <=4 experts) required by the assignment.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Any, Mapping, Optional
 
 
 @dataclasses.dataclass(frozen=True)
@@ -31,11 +31,29 @@ class ParallelConfig:
     microbatches: int = 1    # gradient accumulation chunks
 
     # --- communication schedule (core.schedule.CommSchedule) ----------------
-    prefetch: bool = False            # double-buffer layer all-gathers
+    # two-slot double-buffered layer all-gathers: the layer scan runs over
+    # pairs, slot i%2 gathers layer i, both slots issue before either
+    # layer's compute; gathered buffers never ride the scan carry
+    prefetch: bool = False
     reshard_after_forward: bool = True  # drop gathered params after fwd (remat)
     keep_last_gathered: bool = False  # last layer's gathered params stay live
     gather_dtype: Optional[str] = None  # all-gather wire dtype (None=compute)
-    reduce_dtype: Optional[str] = None  # grad reduce-scatter dtype (None=wire)
+    # grad reduce-scatter dtype (None=wire).  When set, it also pins the
+    # accumulate dtype of the replica gradient psums -- notably the HSDP
+    # cross-pod psum in FSDPRuntime._reduce_grads ("fp32" buys exact
+    # cross-pod accumulation for 2x reduce bandwidth)
+    reduce_dtype: Optional[str] = None
+    # "xla" = lax.all_gather/psum_scatter, overlap left to XLA's
+    # latency-hiding scheduler; "ring" = explicit lax.ppermute chunk ring
+    # (bitwise identical to xla; issue order visible in the HLO)
+    gather_mode: str = "xla"
+    # per-group schedule overrides, group name -> dict over
+    # schedule.GROUP_OVERRIDE_KEYS (gather_mode/gather_dtype/reduce_dtype/
+    # sharded), e.g. {"globals": {"sharded": False},
+    #                 "layers": {"reduce_dtype": "fp32"}} keeps the small
+    # globals group replicated (no per-step gather) and fp32-reduces only
+    # the layer stack
+    group_schedules: Optional[Mapping[str, Mapping[str, Any]]] = None
 
     def __post_init__(self):
         # TP shards activations over "model", so parameters can't also be

@@ -29,12 +29,12 @@ import numpy as np
 from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from ..compat import shard_map
+from ..compat import optimization_barrier, shard_map
 from ..models.transformer import GroupDef
 from .dbuffer import DBuffer
 from .planner import PLANNERS, plan_group
 from .ragged import LANE, ShardDim, TensorSpec, compose_granularity
-from .schedule import CommSchedule, sharded_gather
+from .schedule import CommSchedule, resolve_group_schedules, sharded_gather
 
 
 # ---------------------------------------------------------------------------
@@ -49,9 +49,13 @@ class GroupLayout:
     plan: Any               # GroupPlan
     buffer: DBuffer
     fsdp_axes: tuple[str, ...]
+    fsdp_axis_sizes: tuple[int, ...]
     outer_axis: str | None     # TP/EP axis the buffer is additionally split on
     outer_size: int
     n_layers: int | None
+    # axes the group is replicated on because its schedule said
+    # sharded=False: no gather is emitted; grads are psum'd here instead
+    grad_sync_axes: tuple[str, ...] = ()
 
     @property
     def sharded_dim(self) -> int:
@@ -63,14 +67,18 @@ class GroupLayout:
 
     def pspec(self) -> P:
         axes = ((self.outer_axis,) if self.outer_axis else ()) + self.fsdp_axes
-        entry = axes if len(axes) > 1 else axes[0]
+        if not axes:
+            entry = None  # unsharded (replicated) group
+        else:
+            entry = axes if len(axes) > 1 else axes[0]
         return P(None, entry) if self.n_layers else P(entry)
 
 
 class FSDPRuntime:
     def __init__(self, model, mesh: Mesh, *, planner: str = "ragged",
                  compute_dtype=jnp.bfloat16, donate: bool = True,
-                 scan_unroll: int = 1, schedule: CommSchedule | None = None):
+                 scan_unroll: int = 1, schedule: CommSchedule | None = None,
+                 group_schedules: Mapping[str, Any] | None = None):
         self.model = model
         self.cfg = model.cfg
         self.mesh = mesh
@@ -80,8 +88,18 @@ class FSDPRuntime:
         self.scan_unroll = scan_unroll  # cost-calibration dry runs unroll
         self.schedule = (schedule if schedule is not None
                          else CommSchedule.from_config(self.cfg))
-
         par = self.cfg.parallel
+        # per-group overrides (gather mode/dtypes, sharded=False) on top of
+        # the base schedule; dtype paths validated against the real compute
+        # dtype here so bad combinations fail before the first trace
+        self.group_schedules = resolve_group_schedules(
+            self.schedule,
+            par.group_schedules if group_schedules is None
+            else group_schedules)
+        cdt = jnp.dtype(self.compute_dtype)
+        self.schedule.validate_for(cdt)
+        for s in self.group_schedules.values():
+            s.validate_for(cdt)
         axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
         self.has_pod = "pod" in axis_sizes
         self.tp = par.tp
@@ -92,6 +110,11 @@ class FSDPRuntime:
         self.layouts: dict[str, GroupLayout] = {}
         for name, gdef in model.groups().items():
             self.layouts[name] = self._layout(name, gdef, axis_sizes)
+        unknown = set(self.group_schedules) - set(self.layouts)
+        if unknown:
+            raise ValueError(
+                f"group_schedules for unknown groups {sorted(unknown)}; "
+                f"this model's groups: {sorted(self.layouts)}")
 
         self.batch_axes = tuple(
             a for a in (("pod",) if self.has_pod else ()) + par.batch_axes
@@ -102,6 +125,10 @@ class FSDPRuntime:
         )
 
     # ------------------------------------------------------------------ #
+    def sched_for(self, name: str) -> CommSchedule:
+        """The (possibly group-overridden) schedule for one comm group."""
+        return self.group_schedules.get(name, self.schedule)
+
     def _layout(self, name: str, gdef: GroupDef, axis_sizes) -> GroupLayout:
         par = self.cfg.parallel
         outer_axis, outer_size = None, 1
@@ -120,6 +147,11 @@ class FSDPRuntime:
             fsdp_axes = tuple(a for a in par.fsdp_axes if a in axis_sizes)
         if self.has_pod and par.pod_fsdp:
             fsdp_axes = ("pod",) + fsdp_axes
+        grad_sync_axes: tuple[str, ...] = ()
+        if not self.sched_for(name).sharded:
+            # group kept replicated by its schedule override: no gather,
+            # grads psum'd over the axes it would have been sharded on
+            grad_sync_axes, fsdp_axes = fsdp_axes, ()
         m = int(np.prod([axis_sizes[a] for a in fsdp_axes])) or 1
 
         align = (
@@ -131,8 +163,10 @@ class FSDPRuntime:
             plan = PLANNERS[self.planner_mode](local_specs, m)
         return GroupLayout(
             name=name, gdef=gdef, local_specs=tuple(local_specs), plan=plan,
-            buffer=DBuffer(plan), fsdp_axes=fsdp_axes, outer_axis=outer_axis,
-            outer_size=outer_size, n_layers=gdef.n_layers,
+            buffer=DBuffer(plan), fsdp_axes=fsdp_axes,
+            fsdp_axis_sizes=tuple(axis_sizes[a] for a in fsdp_axes),
+            outer_axis=outer_axis, outer_size=outer_size,
+            n_layers=gdef.n_layers, grad_sync_axes=grad_sync_axes,
         )
 
     # ------------------------------------------------------------------ #
@@ -294,17 +328,66 @@ class FSDPRuntime:
         return jax.jit(step_fn, donate_argnums=donate)
 
     def _reduce_grads(self, grads):
-        """Extra reductions beyond the autodiff psum-scatter: replicated
-        groups psum over 'model'; HSDP psums over 'pod'."""
+        """Extra reductions beyond the autodiff reduce-scatter: replicated
+        groups psum over 'model'; schedule-unsharded groups psum over their
+        would-be FSDP axes; HSDP psums over 'pod'.
+
+        When the group's schedule pins a reduce dtype, these replica psums
+        accumulate in it (the fp32 option matters for the HSDP cross-pod
+        sum at paper scale); with reduce_dtype=None they run in whatever
+        dtype the grads arrive in, which preserves the seed trajectory."""
+        cd = jnp.dtype(self.compute_dtype)
         out = {}
         for name, g in grads.items():
             lo = self.layouts[name]
+            sched = self.sched_for(name)
+            ad = (sched.accum_dtype(cd) if sched.reduce_dtype is not None
+                  else jnp.dtype(g.dtype))
+
+            def _psum(v, axes, ad=ad):
+                if ad != v.dtype:
+                    return lax.psum(v.astype(ad), axes).astype(v.dtype)
+                return lax.psum(v, axes)
+
             if lo.gdef.replicated_over_model and self.tp > 1:
-                g = lax.psum(g, "model")
-            if self.has_pod and "pod" not in lo.fsdp_axes:
-                g = lax.psum(g, "pod")
+                g = _psum(g, "model")
+            if lo.grad_sync_axes:
+                g = _psum(g, lo.grad_sync_axes)
+            if (self.has_pod and "pod" not in lo.fsdp_axes
+                    and "pod" not in lo.grad_sync_axes):
+                # HSDP cross-pod psum -- unless the group is schedule-
+                # unsharded on a pod_fsdp mesh, where grad_sync_axes
+                # already covered "pod"
+                g = _psum(g, "pod")
             out[name] = g
         return out
+
+    # ------------------------------------------------------------------ #
+    def gathered_peak_bytes(self) -> int:
+        """Analytic peak of simultaneously-live gathered layer buffers in
+        the training step -- the quantity the two-slot prefetch bounds:
+        2 slots with prefetch, 1 without, +1 for the split-out last layer,
+        or every layer when reshard_after_forward=False."""
+        cd = jnp.dtype(self.compute_dtype)
+        per_layer, n = 0, 0
+        for name, lo in self.layouts.items():
+            if lo.n_layers and lo.fsdp_axes:
+                # the gather runs over fsdp_axes only: the outer (TP/EP)
+                # shard stays local, so the per-device gathered buffer is
+                # plan.total elements, not sharded_dim
+                per_layer += lo.plan.total * cd.itemsize
+                n = max(n, lo.n_layers)
+        if not n:
+            return 0
+        if not self.schedule.reshard_after_forward:
+            slots = n
+        else:
+            plan = self.schedule.plan_layers(n, remat=True)
+            # no main-scan slot when the main scan is empty (n == 1 with
+            # keep_last_gathered: only the split-out layer is ever live)
+            main_slots = (2 if plan.prefetch else 1) if plan.main else 0
+            slots = main_slots + int(plan.split_last)
+        return per_layer * slots
 
     # ------------------------------------------------------------------ #
     # serving steps (ZeRO-3 inference: per-layer gather, sharded at rest)
@@ -411,14 +494,16 @@ class _ParamGetter:
         self.compute_dtype = runtime.compute_dtype
 
     def _gather_flat(self, name: str, local: jax.Array) -> jax.Array:
-        """All-gather one group buffer per the schedule's wire/reduce dtypes
-        (backward = the ZeRO-3 gradient reduce-scatter)."""
+        """All-gather one group buffer per its (possibly group-overridden)
+        schedule's gather mode and wire/reduce dtypes (backward = the
+        ZeRO-3 gradient reduce-scatter)."""
         lo = self.rt.layouts[name]
-        sched = self.schedule
+        sched = self.rt.sched_for(name)
         cd = jnp.dtype(self.rt.compute_dtype)
         return sharded_gather(
-            local, lo.fsdp_axes, sched.wire_dtype(cd), sched.accum_dtype(cd),
-            cd, jnp.dtype(local.dtype))
+            local, lo.fsdp_axes, lo.fsdp_axis_sizes, sched.wire_dtype(cd),
+            sched.accum_dtype(cd), cd, jnp.dtype(local.dtype),
+            sched.gather_mode)
 
     def _gather_unpack(self, name: str, local: jax.Array):
         return self.rt.layouts[name].buffer.unpack(
@@ -430,22 +515,33 @@ class _ParamGetter:
     def scan(self, groups, body, carry, xs=None):
         """FSDP layer scan.  The CommSchedule controls gather prefetching,
         whether gathered params are resharded after forward, and whether
-        the last layer's gathered params stay live into backward.
+        the last layer's gathered params stay live into backward.  The
+        small-``n_layers`` fallbacks are resolved explicitly by
+        ``CommSchedule.plan_layers`` (see ``LayerPlan``).
 
         Remat structure: activation rematerialization (``self.remat``) and
         parameter resharding (``schedule.reshard_after_forward``) are
         orthogonal.  Resharding puts the gather *inside* the checkpointed
         region (backward re-gathers = ZeRO-3); with resharding off, the
         gather moves outside so the gathered buffer is saved as a residual
-        while layer activations are still rematted."""
+        while layer activations are still rematted.
+
+        Prefetch runs the main scan over layer *pairs* with a two-slot
+        double buffer: slot ``i % 2`` holds layer ``i``'s gathered params,
+        and both slots' gathers are issued before either layer's compute,
+        so the odd slot's gather overlaps the even layer's compute.  The
+        gathered buffers live only inside the (checkpointed) pair body --
+        never in the scan carry -- so backward re-gathers each pair and
+        peak gathered memory is two layer buffers regardless of depth.
+        (Threading the next layer's gathered buffer through the
+        checkpointed carry, as the first cut did, made it a per-step scan
+        residual: backward retained one gathered buffer per layer.)"""
         sched = self.schedule
         stacks = tuple(self.bufs[g] for g in groups)
         n = self.rt.layouts[groups[0]].n_layers
         remat = self.remat
         reshard = sched.reshard_after_forward
-        split_last = bool(sched.keep_last_gathered and remat and reshard
-                          and n >= 2)
-        m = n - 1 if split_last else n
+        plan = sched.plan_layers(n, remat)
 
         def gather_layer(layer_bufs):
             return tuple(self._gather_flat(g, lb)
@@ -465,51 +561,61 @@ class _ParamGetter:
         inner = (jax.checkpoint(compute) if remat and not reshard
                  else compute)
 
-        main_stacks = tuple(s[:m] for s in stacks) if split_last else stacks
-        xs_main = jax.tree.map(lambda t: t[:m], xs) if split_last else xs
-        unroll = max(1, min(self.rt.scan_unroll, m))
+        def slices(lo, hi):
+            return (tuple(s[lo:hi] for s in stacks),
+                    jax.tree.map(lambda t: t[lo:hi], xs))
 
-        if sched.prefetch and m >= 2:
-            # double-buffer: layer k+1's all-gather is issued before layer
-            # k's compute; the gathered buffer rides in the scan carry so
-            # XLA can overlap the gather with the previous layer's compute
-            idxs = jnp.arange(m, dtype=jnp.int32)
-            g0 = gather_layer(tuple(s[0] for s in main_stacks))
-
-            def scan_body(c, scan_xs):
-                i, user_xs = scan_xs
-                user_carry, cur = c
-                # last iteration has nothing to prefetch: reuse `cur`
-                # instead of issuing a wasted layer-sized all-gather
-                nxt = lax.cond(
-                    i + 1 < m,
-                    lambda cur: gather_layer(tuple(
-                        lax.dynamic_index_in_dim(
-                            s, jnp.minimum(i + 1, m - 1), keepdims=False)
-                        for s in main_stacks)),
-                    lambda cur: cur,
-                    cur)
-                user_carry, y = inner(cur, user_carry, user_xs)
-                return (user_carry, nxt), y
-
-            if remat and reshard:
-                scan_body = jax.checkpoint(scan_body)
-            (carry, _), ys = lax.scan(scan_body, (carry, g0),
-                                      (idxs, xs_main), length=m,
-                                      unroll=unroll)
-        elif m:
+        def seq_scan(carry, lo, hi):
+            """Sequential layers [lo, hi): gather inside the checkpointed
+            body, so backward re-gathers (ZeRO-3)."""
             def scan_body(c, scan_xs):
                 layer_bufs, user_xs = scan_xs
                 return inner(gather_layer(layer_bufs), c, user_xs)
 
             if remat and reshard:
                 scan_body = jax.checkpoint(scan_body)
-            carry, ys = lax.scan(scan_body, carry, (main_stacks, xs_main),
-                                 length=m, unroll=unroll)
-        else:
-            ys = None
+            length = hi - lo
+            return lax.scan(scan_body, carry, slices(lo, hi), length=length,
+                            unroll=max(1, min(self.rt.scan_unroll, length)))
 
-        if split_last:
+        ys_parts = []
+        if plan.prefetch:
+            k = 2 * plan.pairs
+            pair_bufs = tuple(
+                s[:k].reshape((plan.pairs, 2) + s.shape[1:]) for s in stacks)
+            pair_xs = jax.tree.map(
+                lambda t: t[:k].reshape((plan.pairs, 2) + t.shape[1:]), xs)
+
+            def pair_body(c, scan_xs):
+                bufs2, xs2 = scan_xs
+                # two-slot double buffer: issue both slots' gathers before
+                # either layer's compute (slot 1 overlaps slot 0's compute)
+                g0 = gather_layer(tuple(b[0] for b in bufs2))
+                g1 = gather_layer(tuple(b[1] for b in bufs2))
+                c, y0 = inner(g0, c, jax.tree.map(lambda t: t[0], xs2))
+                # materialize the carry at the layer seam exactly as a
+                # per-layer scan-iteration boundary would (bitwise parity
+                # with the sequential schedule, forward and backward)
+                c = optimization_barrier(c)
+                c, y1 = inner(g1, c, jax.tree.map(lambda t: t[1], xs2))
+                return c, (y0, y1)
+
+            if remat and reshard:
+                pair_body = jax.checkpoint(pair_body)
+            carry, (ys0, ys1) = lax.scan(
+                pair_body, carry, (pair_bufs, pair_xs), length=plan.pairs,
+                unroll=max(1, min(self.rt.scan_unroll, plan.pairs)))
+            ys_parts.append(jax.tree.map(
+                lambda a, b: jnp.stack([a, b], axis=1).reshape(
+                    (k,) + a.shape[1:]), ys0, ys1))
+            if plan.tail:
+                carry, y_tail = seq_scan(carry, k, plan.main)
+                ys_parts.append(y_tail)
+        elif plan.main:
+            carry, y_main = seq_scan(carry, 0, plan.main)
+            ys_parts.append(y_main)
+
+        if plan.split_last:
             # last layer: gather outside the checkpointed compute -- its
             # gathered params are saved into backward (first to be needed
             # there), skipping one re-gather, as in FSDP2's skip-reshard-
@@ -520,10 +626,17 @@ class _ParamGetter:
                 layer_bufs, user_xs = scan_xs
                 return last_inner(gather_layer(layer_bufs), c, user_xs)
 
-            carry, y_last = lax.scan(
-                last_body, carry,
-                (tuple(s[m:] for s in stacks),
-                 jax.tree.map(lambda t: t[m:], xs)), length=1)
+            carry, y_last = lax.scan(last_body, carry, slices(plan.main, n),
+                                     length=n - plan.main)
+            ys_parts.append(y_last)
+
+        ys_parts = [p for p in ys_parts
+                    if p is not None and jax.tree.leaves(p)]
+        if not ys_parts:
+            ys = None
+        elif len(ys_parts) == 1:
+            ys = ys_parts[0]
+        else:
             ys = jax.tree.map(
-                lambda a, b: jnp.concatenate([a, b], axis=0), ys, y_last)
+                lambda *parts: jnp.concatenate(parts, axis=0), *ys_parts)
         return carry, ys

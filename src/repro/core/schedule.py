@@ -7,12 +7,19 @@ dtype.  This module turns each of those decisions into a policy knob,
 mirroring the ``fully_shard(reshard_after_forward=..., mp_policy=...)``
 surface of production FSDP:
 
-  * ``prefetch``       -- double-buffer layer all-gathers inside the scan:
-                          layer k+1's gather is issued *before* layer k's
-                          compute, so XLA's latency-hiding scheduler can
-                          overlap communication with compute.  Costs one
-                          extra gathered layer buffer carried through the
-                          scan (classic FSDP double-buffering).
+  * ``prefetch``       -- two-slot double-buffered layer all-gathers: the
+                          scan runs over layer *pairs* and both slots'
+                          gathers (slot ``i % 2`` holds layer ``i``) are
+                          issued before either layer's compute, so the
+                          odd slot's gather overlaps the even layer's
+                          compute.  The gathered buffers live only inside
+                          the checkpointed pair body -- never in the scan
+                          carry -- so backward re-gathers (ZeRO-3) and peak
+                          gathered memory stays at two layer buffers
+                          regardless of depth.  (The seed's first cut
+                          threaded the next layer's gathered buffer through
+                          the checkpointed carry, which made backward retain
+                          one gathered buffer *per layer*.)
   * ``reshard_after_forward`` -- True (default): gathered parameters are
                           dropped after each layer's forward and re-gathered
                           in backward (ZeRO-3).  False keeps every layer's
@@ -25,23 +32,74 @@ surface of production FSDP:
                           resharding: its gathered parameters stay live into
                           backward, where they are needed first (FSDP2 skips
                           resharding the final block for the same reason).
+  * ``gather_mode``    -- "xla" (default): one ``lax.all_gather`` /
+                          ``lax.psum_scatter`` pair per layer, overlap left
+                          to XLA's latency-hiding scheduler.  "ring": a
+                          manual ``lax.ppermute`` ring -- the all-gather is
+                          n-1 explicit chunk hops written into the output at
+                          absolute device offsets, so issue order (and hence
+                          overlap) is visible in the HLO as
+                          collective-permutes rather than inferred.  Its
+                          backward is the matching ring reduce-scatter:
+                          chunks are routed un-reduced to their destination
+                          (the buffer shrinks by one chunk per hop) and
+                          accumulated there in *absolute device order* in
+                          fp32.  That destination-ordered reduction is what
+                          XLA's CPU all-reduce does, so ring mode is bitwise
+                          identical to xla mode -- the price is n/2x the
+                          reduce-scatter wire volume of an
+                          accumulate-in-flight ring, which a production
+                          deployment would buy back by giving up bitwise
+                          reproducibility.
   * ``gather_dtype``   -- wire dtype of the parameter all-gather
                           ("bf16"/"fp32"; None = the runtime compute dtype).
   * ``reduce_dtype``   -- accumulate dtype of the gradient reduce-scatter
                           ("bf16"/"fp32"; None = same as the wire dtype).
                           fp32 trades 2x reduce bandwidth for exact
-                          accumulation across large FSDP groups.
+                          accumulation across large FSDP groups.  When set,
+                          it also pins the accumulate dtype of the *replica*
+                          gradient psums (HSDP cross-pod, TP-replicated
+                          groups, unsharded groups) in
+                          ``FSDPRuntime._reduce_grads``.
+  * ``sharded``        -- per-group knob (see below): False keeps the
+                          group's flat buffer replicated instead of
+                          FSDP-sharding it.  No gather is emitted at all;
+                          gradients are psum'd over the axes the group would
+                          have been sharded on.  Meant for small groups
+                          (e.g. ``globals``) whose per-layer gather latency
+                          outweighs the memory saved.
+
+Per-group overrides: ``ParallelConfig.group_schedules`` (or the
+``group_schedules=`` kwarg of ``FSDPRuntime``) maps a communication-group
+name to a dict of overrides drawn from ``GROUP_OVERRIDE_KEYS``
+(``gather_mode``, ``gather_dtype``, ``reduce_dtype``, ``sharded``), e.g.::
+
+    group_schedules={"globals": {"sharded": False},
+                     "layers":  {"reduce_dtype": "fp32"}}
+
+keeps the small globals group unsharded and fp32-reduces only the layer
+stack.  Scan *structure* knobs (prefetch / reshard / keep_last) always come
+from the base schedule; overrides affect how each group's buffer is moved.
 
 ``sharded_gather`` is the one primitive the runtime gathers parameters
-through: forward = cast-to-wire + all-gather, backward = cast-to-reduce +
-psum-scatter (the ZeRO-3 gradient reduce-scatter).  With default dtypes its
-VJP is op-for-op the autodiff transpose of the seed's
+through: forward = cast-to-wire + all-gather (xla or ring), backward =
+cast-to-reduce + reduce-scatter (the ZeRO-3 gradient reduce-scatter).  With
+default dtypes its VJP is op-for-op the autodiff transpose of the seed's
 ``astype(bf16); all_gather``, so the default schedule is bitwise identical
-to the pre-schedule runtime.
+to the pre-schedule runtime, and ring mode is bitwise identical to xla mode.
+
+Validation happens in two stages: ``__post_init__`` checks dtype *names*
+and the gather mode at construction, and ``validate_for(compute_dtype)``
+(called by ``FSDPRuntime.__init__`` with the actual compute dtype) resolves
+the full wire/accum dtype path so a ``None`` dtype that would inherit an
+unsupported compute dtype fails at runtime construction instead of at first
+trace.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
+from collections.abc import Mapping
 from functools import partial
 
 import jax
@@ -56,16 +114,53 @@ _DTYPES = {
     "float32": jnp.float32,
 }
 
+_GATHER_MODES = ("xla", "ring")
 
-def _resolve(name: str | None, default):
-    if name is None:
-        return jnp.dtype(default)
-    try:
-        return jnp.dtype(_DTYPES[name])
-    except KeyError:
+# Per-group schedule override surface (ParallelConfig.group_schedules /
+# FSDPRuntime(group_schedules=...)).  Scan-structure knobs are deliberately
+# excluded: one scan gathers several groups per layer, so prefetch /
+# reshard / keep_last must agree across them and come from the base
+# schedule.
+GROUP_OVERRIDE_KEYS = frozenset(
+    {"gather_mode", "gather_dtype", "reduce_dtype", "sharded"})
+
+
+def _check_name(name: str | None) -> None:
+    if name is not None and name not in _DTYPES:
         raise ValueError(
             f"unknown schedule dtype {name!r}; expected one of "
-            f"{sorted(_DTYPES)}") from None
+            f"{sorted(_DTYPES)}")
+
+
+def _resolve(name: str | None, default) -> jnp.dtype:
+    if name is None:
+        return jnp.dtype(default)
+    _check_name(name)
+    return jnp.dtype(_DTYPES[name])
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerPlan:
+    """Resolved layer-scan structure for one ``n_layers`` stack.
+
+    ``CommSchedule.plan_layers`` makes the small-n fallbacks explicit
+    instead of leaving them to guard conditions inside the scan:
+
+      * ``split_last`` needs remat + reshard (otherwise the last layer's
+        gathered params are live into backward anyway).  With n == 1 the
+        only layer *is* the last: the main scan is empty and the single
+        layer runs un-rematted (``main == 0``).
+      * ``prefetch`` double-buffers layer pairs, so it needs at least two
+        main-scan layers; with ``main < 2`` (n == 1, or n == 2 with
+        keep_last_gathered) it falls back to the sequential scan.
+    """
+
+    n_layers: int
+    main: int          # layers run by the main scan (pair or sequential)
+    split_last: bool   # last layer split out of the main scan
+    prefetch: bool     # two-slot double buffering actually in effect
+    pairs: int         # prefetch pair-scan length (main // 2)
+    tail: int          # odd layer after the pair scan (0 or 1)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -75,11 +170,18 @@ class CommSchedule:
     keep_last_gathered: bool = False
     gather_dtype: str | None = None
     reduce_dtype: str | None = None
+    gather_mode: str = "xla"
+    sharded: bool = True
 
     def __post_init__(self):
-        # fail at construction, not at first trace
-        _resolve(self.gather_dtype, jnp.bfloat16)
-        _resolve(self.reduce_dtype, jnp.bfloat16)
+        # name/mode validation at construction; the dtype *path* is checked
+        # against the real compute dtype by validate_for (runtime init)
+        _check_name(self.gather_dtype)
+        _check_name(self.reduce_dtype)
+        if self.gather_mode not in _GATHER_MODES:
+            raise ValueError(
+                f"unknown gather_mode {self.gather_mode!r}; expected one of "
+                f"{list(_GATHER_MODES)}")
 
     @classmethod
     def default(cls) -> "CommSchedule":
@@ -94,6 +196,7 @@ class CommSchedule:
             keep_last_gathered=par.keep_last_gathered,
             gather_dtype=par.gather_dtype,
             reduce_dtype=par.reduce_dtype,
+            gather_mode=par.gather_mode,
         )
 
     def wire_dtype(self, compute_dtype) -> jnp.dtype:
@@ -102,16 +205,66 @@ class CommSchedule:
     def accum_dtype(self, compute_dtype) -> jnp.dtype:
         return _resolve(self.reduce_dtype, self.wire_dtype(compute_dtype))
 
+    def validate_for(self, compute_dtype) -> None:
+        """Resolve the full wire/accum dtype path against the *actual*
+        compute dtype and reject unsupported results.  A ``None``
+        gather_dtype inherits the compute dtype, so e.g. fp16 compute must
+        fail here (at runtime construction), not at first trace."""
+        supported = set(_DTYPES.values())
+        for role, dt in (("gather", self.wire_dtype(compute_dtype)),
+                         ("reduce", self.accum_dtype(compute_dtype))):
+            if dt.type not in supported:
+                raise ValueError(
+                    f"schedule {role} dtype resolves to unsupported {dt} "
+                    f"(compute dtype {jnp.dtype(compute_dtype)}); supported: "
+                    f"{sorted(set(_DTYPES))}")
+
+    def plan_layers(self, n_layers: int, remat: bool = True) -> LayerPlan:
+        """Resolve the scan structure for an ``n_layers`` stack (see
+        ``LayerPlan`` for the explicit small-n fallback rules)."""
+        n = int(n_layers)
+        split_last = bool(self.keep_last_gathered and remat
+                          and self.reshard_after_forward and n >= 1)
+        main = n - 1 if split_last else n
+        prefetch = bool(self.prefetch and main >= 2)
+        pairs = main // 2 if prefetch else 0
+        tail = main - 2 * pairs if prefetch else 0
+        return LayerPlan(n_layers=n, main=main, split_last=split_last,
+                         prefetch=prefetch, pairs=pairs, tail=tail)
+
     def describe(self) -> str:
         return (f"prefetch={int(self.prefetch)} "
                 f"reshard={int(self.reshard_after_forward)} "
                 f"keep_last={int(self.keep_last_gathered)} "
+                f"mode={self.gather_mode} "
                 f"gather={self.gather_dtype or 'compute'} "
                 f"reduce={self.reduce_dtype or 'wire'}")
 
 
+def resolve_group_schedules(base: CommSchedule, overrides) -> dict:
+    """Apply per-group override dicts to ``base``.  Only keys in
+    ``GROUP_OVERRIDE_KEYS`` are allowed; anything else (including scan
+    structure knobs) raises at construction time."""
+    out: dict[str, CommSchedule] = {}
+    for name, ov in (overrides or {}).items():
+        if not isinstance(ov, Mapping):
+            # a whole CommSchedule would smuggle scan-structure knobs past
+            # the override surface (scan() only reads them from base)
+            raise ValueError(
+                f"group_schedules[{name!r}] must be a dict over "
+                f"{sorted(GROUP_OVERRIDE_KEYS)}, got {type(ov).__name__}")
+        bad = set(ov) - GROUP_OVERRIDE_KEYS
+        if bad:
+            raise ValueError(
+                f"group_schedules[{name!r}]: unknown override keys "
+                f"{sorted(bad)}; allowed: {sorted(GROUP_OVERRIDE_KEYS)}")
+        out[name] = dataclasses.replace(base, **dict(ov))
+    return out
+
+
 # Named variants used by tests/benchmarks (parity: all must match default
-# bitwise on one device; multi-device dtype variants differ only on the wire).
+# bitwise on one device; multi-device dtype variants differ only on the
+# wire, and ring variants are bitwise identical to their xla twins).
 VARIANTS: dict[str, CommSchedule] = {
     "default": CommSchedule(),
     "prefetch": CommSchedule(prefetch=True),
@@ -121,40 +274,122 @@ VARIANTS: dict[str, CommSchedule] = {
     "fp32_reduce": CommSchedule(reduce_dtype="fp32"),
     "overlap_all": CommSchedule(prefetch=True, keep_last_gathered=True,
                                 reduce_dtype="fp32"),
+    "ring": CommSchedule(gather_mode="ring"),
+    "ring_overlap": CommSchedule(gather_mode="ring", prefetch=True,
+                                 keep_last_gathered=True,
+                                 reduce_dtype="fp32"),
 }
+
+
+# --------------------------------------------------------------------------- #
+# manual ring collectives (gather_mode="ring")
+# --------------------------------------------------------------------------- #
+def _ring_axis(axes: tuple[str, ...]):
+    # ppermute/axis_index treat a tuple of mesh axes as one flattened ring
+    # in axis-major order -- the same order lax.all_gather tiles over
+    return axes if len(axes) != 1 else axes[0]
+
+
+def _ring_all_gather(x, axes: tuple[str, ...], axis_sizes: tuple[int, ...]):
+    """Chunked ring all-gather over the flattened ``axes`` group: n-1
+    ``ppermute`` hops, each forwarding one shard-sized chunk, written into
+    the tiled output at absolute device offsets.  Pure data movement, so
+    bitwise identical to ``lax.all_gather(..., tiled=True)``."""
+    n = math.prod(axis_sizes)
+    if n == 1:
+        return x
+    ax = _ring_axis(axes)
+    idx = lax.axis_index(ax)
+    perm = [((i + 1) % n, i) for i in range(n)]  # receive from the right
+    c = x.shape[0]
+    out = jnp.zeros((n * c,) + x.shape[1:], x.dtype)
+    cur = x
+    out = lax.dynamic_update_slice_in_dim(out, cur, idx * c, axis=0)
+    for k in range(1, n):
+        cur = lax.ppermute(cur, ax, perm)  # now holds device (idx+k)'s shard
+        out = lax.dynamic_update_slice_in_dim(
+            out, cur, ((idx + k) % n) * c, axis=0)
+    return out
+
+
+def _ring_reduce_scatter(ct, axes: tuple[str, ...],
+                         axis_sizes: tuple[int, ...]):
+    """Ring reduce-scatter matching ``lax.psum_scatter`` bitwise.
+
+    Chunks are routed *un-reduced* to their destination device -- each hop
+    the in-flight buffer sheds the chunk that just arrived home, so hop k
+    carries n-1-k chunks -- and the destination accumulates its n
+    contributions in absolute device order, upcast to fp32, rounding to the
+    reduce dtype once.  That is exactly the (deterministic, linear-order,
+    fp32-accumulate) reduction XLA's CPU all-reduce family performs, which
+    is what makes ring mode bitwise identical to xla mode.  Wire volume is
+    sum(n-1-k) = n(n-1)/2 chunks vs the accumulate-in-flight ring's n-1:
+    the cost of order-exactness, acceptable at repro scale and documented
+    for paper scale."""
+    n = math.prod(axis_sizes)
+    if n == 1:
+        return ct
+    ax = _ring_axis(axes)
+    idx = lax.axis_index(ax)
+    perm = [((i + 1) % n, i) for i in range(n)]  # receive from the right
+    c = ct.shape[0] // n
+    chunks = ct.reshape((n, c) + ct.shape[1:])
+    # pre-rotate so row j holds this device's contribution to device idx+j:
+    # every harvest below is then a *static* slice (the last row)
+    chunks = jnp.roll(chunks, -idx, axis=0)
+    parts = [chunks[0]]          # own contribution to own chunk
+    buf = chunks[1:]
+    for _ in range(n - 1):
+        buf = lax.ppermute(buf, ax, perm)
+        parts.append(buf[-1])    # device (idx+k)'s contribution, now home
+        buf = buf[:-1]
+    # parts[k] came from device (idx+k) % n; reduce in absolute device
+    # order 0..n-1 in fp32, round once (== XLA's reduction order)
+    stack = jnp.stack(parts)
+    ordered = jnp.take(stack, (jnp.arange(n) - idx) % n, axis=0)
+    total = ordered[0].astype(jnp.float32)
+    for j in range(1, n):
+        total = total + ordered[j].astype(jnp.float32)
+    return total.astype(ct.dtype)
 
 
 # --------------------------------------------------------------------------- #
 # the gather/reduce-scatter primitive
 # --------------------------------------------------------------------------- #
-@partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4, 5))
-def sharded_gather(x, axes, wire_dtype, reduce_dtype, out_dtype, param_dtype):
+@partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4, 5, 6, 7))
+def sharded_gather(x, axes, axis_sizes, wire_dtype, reduce_dtype, out_dtype,
+                   param_dtype, mode):
     """All-gather ``x`` (a device-local flat buffer slice, leading axis
-    tiled) over the FSDP mesh ``axes``.
+    tiled) over the FSDP mesh ``axes`` (sizes ``axis_sizes``).
 
-    forward:  cast to ``wire_dtype`` -> all_gather -> cast to ``out_dtype``
-    backward: cast cotangent to ``reduce_dtype`` -> psum_scatter (the ZeRO-3
-              gradient reduce-scatter) -> cast to ``param_dtype``
+    forward:  cast to ``wire_dtype`` -> all-gather (xla collective or
+              explicit ppermute ring, per ``mode``) -> cast to ``out_dtype``
+    backward: cast cotangent to ``reduce_dtype`` -> reduce-scatter (the
+              ZeRO-3 gradient reduce-scatter; psum_scatter or the matching
+              ring) -> cast to ``param_dtype``
     """
     y = x.astype(wire_dtype)
     if axes:
-        y = lax.all_gather(y, axes, tiled=True)
+        y = (_ring_all_gather(y, axes, axis_sizes) if mode == "ring"
+             else lax.all_gather(y, axes, tiled=True))
     return y.astype(out_dtype)
 
 
-def _gather_fwd(x, axes, wire_dtype, reduce_dtype, out_dtype, param_dtype):
+def _gather_fwd(x, axes, axis_sizes, wire_dtype, reduce_dtype, out_dtype,
+                param_dtype, mode):
     return (
-        sharded_gather(x, axes, wire_dtype, reduce_dtype, out_dtype,
-                       param_dtype),
+        sharded_gather(x, axes, axis_sizes, wire_dtype, reduce_dtype,
+                       out_dtype, param_dtype, mode),
         None,
     )
 
 
-def _gather_bwd(axes, wire_dtype, reduce_dtype, out_dtype, param_dtype,
-                _res, ct):
+def _gather_bwd(axes, axis_sizes, wire_dtype, reduce_dtype, out_dtype,
+                param_dtype, mode, _res, ct):
     g = ct.astype(reduce_dtype)
     if axes:
-        g = lax.psum_scatter(g, axes, scatter_dimension=0, tiled=True)
+        g = (_ring_reduce_scatter(g, axes, axis_sizes) if mode == "ring"
+             else lax.psum_scatter(g, axes, scatter_dimension=0, tiled=True))
     return (g.astype(param_dtype),)
 
 

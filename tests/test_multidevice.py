@@ -39,9 +39,11 @@ _DRIVER = textwrap.dedent("""
             b["frames"] = jnp.asarray(rng.normal(size=(B, cfg.n_frames, cfg.d_model)), jnp.bfloat16)
         return b
 
-    def run(cfg, mesh, steps=2, planner="ragged", schedule=None):
+    def run(cfg, mesh, steps=2, planner="ragged", schedule=None,
+            group_schedules=None):
         model = build_model(cfg)
-        rt = FSDPRuntime(model, mesh, planner=planner, schedule=schedule)
+        rt = FSDPRuntime(model, mesh, planner=planner, schedule=schedule,
+                         group_schedules=group_schedules)
         params = rt.init_params(0)
         opt = make_optimizer(cfg)
         ostate = opt.init(rt)
@@ -105,6 +107,28 @@ _DRIVER = textwrap.dedent("""
         tst = dataclasses.replace(cfg, parallel=ParallelConfig(
             ("data",), ("data",), microbatches=4))
         tst_losses, _ = run(tst, make_local_mesh(2, 1))
+    elif scenario == "hsdp_groups":
+        # schedule-unsharded globals on a pod_fsdp (2 pods x 4) mesh ==
+        # flat 8-way FSDP: grad_sync_axes covers ("pod", "data"), so this
+        # guards the cross-pod psum against double-reducing such groups
+        cfg = get_config("gemma2-2b").reduced()
+        base = dataclasses.replace(cfg, parallel=ParallelConfig(("data",), ("data",)))
+        ref_losses, _ = run(base, make_local_mesh(8, 1))
+        tst = dataclasses.replace(cfg, parallel=ParallelConfig(
+            ("data",), ("data",), pod_fsdp=True))
+        tst_losses, _ = run(tst, make_local_mesh(4, 1, pod=2),
+                            group_schedules={"globals": {"sharded": False}})
+    elif scenario == "sched_groups":
+        # per-group schedule overrides over 8-way FSDP: globals kept
+        # replicated (grads psum'd instead of reduce-scattered), layers
+        # ring-gathered with fp32 reduce == uniform default schedule
+        cfg = get_config("qwen2.5-14b").reduced()
+        cfg = dataclasses.replace(cfg, n_layers=4)
+        base = dataclasses.replace(cfg, parallel=ParallelConfig(("data",), ("data",)))
+        ref_losses, _ = run(base, make_local_mesh(8, 1))
+        tst_losses, _ = run(base, make_local_mesh(8, 1), group_schedules={
+            "globals": {"sharded": False},
+            "layers": {"gather_mode": "ring", "reduce_dtype": "fp32"}})
     elif scenario.startswith("sched_"):
         # overlap schedule (prefetch + keep-last + fp32 reduce) over 8-way
         # FSDP == default schedule, per planner layout; only the wire/reduce
@@ -141,7 +165,8 @@ def _run(scenario: str):
 @pytest.mark.slow
 @pytest.mark.parametrize("scenario", ["fsdp8", "hsdp", "tp", "tp_sp", "ep",
                                       "micro", "shampoo", "sched_ragged",
-                                      "sched_fsdp2"])
+                                      "sched_fsdp2", "sched_groups",
+                                      "hsdp_groups"])
 def test_parallel_equivalence(scenario):
     ref, tst = _run(scenario)
     for r, t in zip(ref, tst):
