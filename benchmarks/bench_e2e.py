@@ -18,7 +18,7 @@ import numpy as np
 
 from repro.configs import build_model, get_config
 from repro.core.fsdp import FSDPRuntime
-from repro.core.schedule import VARIANTS
+from repro.core.schedule import APPROX_VARIANTS, VARIANTS
 from repro.launch.mesh import make_local_mesh
 from repro.optim import make_optimizer
 
@@ -77,10 +77,14 @@ def run(quick: bool = False, arch: str = "gpt-oss-120b"):
 def run_schedules(quick: bool = False, arch: str = "gpt-oss-120b"):
     """Per-CommSchedule step time + temp memory on the ragged planner: the
     cost/benefit of prefetch double-buffering, ring vs xla gathers,
-    skipping reshard, and wire/reduce dtype choices (all numerically
-    identical on one device).  ``gathered_peak_mb`` is the analytic peak of
-    live gathered layer buffers -- the quantity the two-slot prefetch
-    bounds at 2 per depth (the retention bug made it n_layers)."""
+    skipping reshard, wire/reduce dtype choices (all numerically identical
+    on one device), plus the approx variants (ring_acc reduce, q8_block
+    stores).  ``gathered_peak_mb`` is the analytic peak of live gathered
+    layer buffers -- the quantity the two-slot prefetch bounds at 2 per
+    depth (the retention bug made it n_layers).  ``gather_wire_mb`` is the
+    bytes one forward pass's parameter all-gathers put on the wire: compare
+    the fp32_wire row (4 B/element) against the q8 rows (1 B/element codes
+    + per-block scales) for the ~4x quantized-store drop."""
     cfg, batch = _bench_cfg(arch, quick)
     mesh = make_local_mesh(1, 1)
     out = {}
@@ -88,8 +92,9 @@ def run_schedules(quick: bool = False, arch: str = "gpt-oss-120b"):
     # measure "default" first so the speedup ratio really is vs. default,
     # whatever order VARIANTS declares
     order = ["default"] + [k for k in VARIANTS if k != "default"]
+    order += list(APPROX_VARIANTS)
     for name in order:
-        sched = VARIANTS[name]
+        sched = VARIANTS.get(name) or APPROX_VARIANTS[name]
         rt = FSDPRuntime(build_model(cfg), mesh, schedule=sched,
                          donate=False)
         us, temp = _measure_step(cfg, rt, batch, quick)
@@ -99,6 +104,7 @@ def run_schedules(quick: bool = False, arch: str = "gpt-oss-120b"):
         emit(f"sched/{arch}/{name}/step", us,
              f"temp_mb={temp/1e6:.1f};"
              f"gathered_peak_mb={rt.gathered_peak_bytes()/1e6:.2f};"
+             f"gather_wire_mb={rt.gather_wire_bytes()/1e6:.2f};"
              f"speedup_vs_default={base/us:.3f};"
              f"{sched.describe().replace(' ', ';')}")
     return out

@@ -13,6 +13,7 @@ import json
 import pathlib
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from ..compat import tree_flatten_with_path, tree_unflatten
@@ -32,27 +33,52 @@ def save(path, runtime, params, opt_state=None, step: int = 0):
                 "outer_size": lo.outer_size,
                 "n_layers": lo.n_layers,
                 "mode": lo.plan.mode,
+                "store": lo.store.fmt,
+                "quant_block": lo.store.block,
             }
             for name, lo in runtime.layouts.items()
         },
     }
     (path / "meta.json").write_text(json.dumps(meta, indent=1))
-    arrays = {f"param__{k}": np.asarray(v) for k, v in params.items()}
+    # flat stores save one array per group (the seed's format); dict states
+    # (q8_block) save one array per leaf: param__<group>__<leaf>
+    arrays = {}
+    for k, v in params.items():
+        if isinstance(v, dict):
+            for leaf, a in v.items():
+                arrays[f"param__{k}__{leaf}"] = _savable(a)
+        else:
+            arrays[f"param__{k}"] = _savable(v)
     if opt_state is not None:
         flat, _ = tree_flatten_with_path(opt_state)
         for kp, v in flat:
             key = "opt__" + "__".join(
                 getattr(p, "key", str(p)) for p in kp)
-            arrays[key] = np.asarray(v)
+            arrays[key] = _savable(v)
     np.savez(path / "state.npz", **arrays)
+
+
+def _savable(a) -> np.ndarray:
+    """np.savez round-trips numpy-native dtypes only: ml_dtypes bfloat16
+    degrades to a raw void ('|V2') array on load.  Widen bf16 to fp32 on
+    disk (exact; the store format in meta says what to narrow back to)."""
+    a = np.asarray(a)
+    if a.dtype.kind == "V" or str(a.dtype) == "bfloat16":
+        return np.asarray(jnp.asarray(a).astype(jnp.float32))
+    return a
 
 
 def load(path, runtime, opt_state_like=None):
     """Restore params (+ optionally opt state) onto the runtime's mesh.
 
-    If the saved plan matches the runtime's plan, buffers load directly;
-    otherwise each tensor is re-extracted via the saved index and re-packed
-    with the current plan (resharded restore)."""
+    If the saved plan AND store format match the runtime's, buffers load
+    leaf-by-leaf directly (bitwise: a q8_block round-trip preserves the
+    master shard and the codes exactly).  Otherwise the fp32 master is
+    reconstructed from the saved state, re-extracted via the saved index
+    and re-packed with the current plan if the plans differ, and the
+    runtime's store re-derives its state from it (resharded and/or
+    re-formatted restore: codes are requantized from the master, which is
+    exact because align pins every tensor start to the quant block)."""
     from jax.sharding import NamedSharding
 
     path = pathlib.Path(path)
@@ -61,17 +87,34 @@ def load(path, runtime, opt_state_like=None):
     params = {}
     for name, lo in runtime.layouts.items():
         saved = meta["groups"][name]
-        buf = data[f"param__{name}"]
+        saved_store = saved.get("store", "fp32")  # pre-store checkpoints
         same_plan = (
             saved["shard_size"] == lo.plan.shard_size
             and saved["num_shards"] == lo.plan.num_shards
             and saved["outer_size"] == lo.outer_size
             and saved["mode"] == lo.plan.mode
         )
-        if not same_plan:
-            buf = _repack(buf, saved, lo)
-        params[name] = jax.device_put(
-            buf, NamedSharding(runtime.mesh, lo.pspec()))
+        sharding = NamedSharding(runtime.mesh, lo.pspec())
+        same_store = saved_store == lo.store.fmt and (
+            not lo.store.quantized
+            or saved.get("quant_block") == lo.store.block)
+        if same_plan and same_store:
+            if lo.store.quantized:
+                state = {leaf: data[f"param__{name}__{leaf}"]
+                         for leaf in ("codes", "master", "scales")}
+            else:
+                # bf16 buffers are widened to fp32 on disk (_savable);
+                # narrow back to the store dtype -- exact round-trip
+                state = np.asarray(
+                    jnp.asarray(data[f"param__{name}"])
+                    .astype(lo.store.storage_dtype))
+        else:
+            master = _saved_master(data, name, saved_store)
+            if not same_plan:
+                master = _repack(master, saved, lo)
+            state = lo.store.create(master)
+        params[name] = jax.tree.map(
+            lambda a: jax.device_put(a, sharding), state)
     out = [params, int(meta["step"])]
     if opt_state_like is not None:
         flat, tree = tree_flatten_with_path(opt_state_like)
@@ -81,6 +124,13 @@ def load(path, runtime, opt_state_like=None):
             restored.append(jax.device_put(data[key], like.sharding))
         out.append(tree_unflatten(tree, restored))
     return tuple(out)
+
+
+def _saved_master(data, name: str, saved_store: str) -> np.ndarray:
+    """fp32 master weights of one group from a saved state of any format."""
+    if saved_store == "q8_block":
+        return np.asarray(data[f"param__{name}__master"], np.float32)
+    return np.asarray(data[f"param__{name}"], np.float32)
 
 
 def _repack(buf: np.ndarray, saved: dict, lo) -> np.ndarray:

@@ -47,6 +47,18 @@ class ParallelConfig:
     # latency-hiding scheduler; "ring" = explicit lax.ppermute chunk ring
     # (bitwise identical to xla; issue order visible in the HLO)
     gather_mode: str = "xla"
+    # gradient reduce-scatter algorithm: "match" mirrors the gather mode
+    # (bitwise identical to XLA's linear-order reduction); "ring_acc" is the
+    # accumulate-in-flight ring -- n-1 chunk-hops instead of the order-exact
+    # ring's n(n-1)/2, trading bitwise-vs-XLA reproducibility for bandwidth
+    reduce_mode: str = "match"
+    # storage format of the sharded parameter buffers (core.store.ParamStore):
+    # "fp32" (master weights, the default), "bf16" (half-size storage),
+    # "q8_block" (block-wise int8 codes + scales alongside an fp32 master
+    # shard; the all-gather moves the quantized payload, ~4x fewer wire
+    # bytes than fp32).  Per-group overrides go through group_schedules,
+    # e.g. {"layers": {"param_store": "q8_block"}}
+    param_store: str = "fp32"
     # per-group schedule overrides, group name -> dict over
     # schedule.GROUP_OVERRIDE_KEYS (gather_mode/gather_dtype/reduce_dtype/
     # sharded), e.g. {"globals": {"sharded": False},

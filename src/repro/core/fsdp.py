@@ -4,12 +4,18 @@
 
   * each communication group's tensors are localized (outer TP/EP sharding
     composed per paper §4), planned (Algorithm 1), and backed by a DBuffer
-    whose flat buffer is sharded over the group's FSDP mesh axes;
+    whose flat buffer is sharded over the group's FSDP mesh axes.  The
+    *storage format* of that buffer is a ParamStore policy (core.store):
+    fp32 master weights (default), bf16, or block-wise int8 codes+scales
+    alongside an fp32 master shard (``param_store="q8_block"``, the paper's
+    block-wise quantized training scenario);
   * the train step runs under shard_map.  The layer scan all-gathers one
-    layer's flat buffer (bf16 on the wire), unpacks zero-copy, and computes;
-    ``jax.grad`` transposes the all-gather into a psum-scatter, which IS the
-    ZeRO-3 gradient reduce-scatter.  Remat re-gathers parameters in the
-    backward pass, matching FSDP's backward re-allgather;
+    layer's store payload (bf16 flat buffer by default; int8 codes + scales
+    for quantized stores, dequantized locally), unpacks zero-copy, and
+    computes; ``jax.grad`` transposes the gather into a psum-scatter, which
+    IS the ZeRO-3 gradient reduce-scatter -- targeting the store's
+    trainable (master) buffer.  Remat re-gathers parameters in the backward
+    pass, matching FSDP's backward re-allgather;
   * HSDP: on the multi-pod mesh the ``pod`` axis replicates parameters and
     grads are psum'd across pods (paper §6.1); ``pod_fsdp=True`` extends
     ZeRO-3 over pods instead;
@@ -34,7 +40,8 @@ from ..models.transformer import GroupDef
 from .dbuffer import DBuffer
 from .planner import PLANNERS, plan_group
 from .ragged import LANE, ShardDim, TensorSpec, compose_granularity
-from .schedule import CommSchedule, resolve_group_schedules, sharded_gather
+from .schedule import CommSchedule, resolve_group_schedules
+from .store import ParamStore
 
 
 # ---------------------------------------------------------------------------
@@ -56,6 +63,9 @@ class GroupLayout:
     # axes the group is replicated on because its schedule said
     # sharded=False: no gather is emitted; grads are psum'd here instead
     grad_sync_axes: tuple[str, ...] = ()
+    # storage format of the group's sharded buffer (what params[name] holds
+    # and what the all-gather moves) -- see core.store.ParamStore
+    store: ParamStore = ParamStore()
 
     @property
     def sharded_dim(self) -> int:
@@ -154,31 +164,45 @@ class FSDPRuntime:
             grad_sync_axes, fsdp_axes = fsdp_axes, ()
         m = int(np.prod([axis_sizes[a] for a in fsdp_axes])) or 1
 
-        align = (
-            self.cfg.quant_block if self.cfg.optimizer == "adam8bit" else 1
+        store = ParamStore(self.sched_for(name).param_store,
+                           self.cfg.quant_block)
+        # quant blocks must never straddle a shard boundary or a tensor
+        # start -- for the 8-bit optimizer states AND for any group whose
+        # *store* is quantized (the paper's block-wise quantized training)
+        align = max(
+            store.align(),
+            self.cfg.quant_block if self.cfg.optimizer == "adam8bit" else 1,
         )
         if self.planner_mode == "ragged":
             plan = plan_group(local_specs, m, g_coll=LANE, align=align)
         else:
             plan = PLANNERS[self.planner_mode](local_specs, m)
+        if store.quantized and plan.shard_size % store.block:
+            raise ValueError(
+                f"group {name}: planner mode {self.planner_mode!r} produced "
+                f"shard size {plan.shard_size} not aligned to quant block "
+                f"{store.block}; q8_block needs the ragged planner's align "
+                f"guarantee")
         return GroupLayout(
             name=name, gdef=gdef, local_specs=tuple(local_specs), plan=plan,
             buffer=DBuffer(plan), fsdp_axes=fsdp_axes,
             fsdp_axis_sizes=tuple(axis_sizes[a] for a in fsdp_axes),
             outer_axis=outer_axis, outer_size=outer_size,
             n_layers=gdef.n_layers, grad_sync_axes=grad_sync_axes,
+            store=store,
         )
 
     # ------------------------------------------------------------------ #
     # state construction
     # ------------------------------------------------------------------ #
-    def param_shapes(self) -> dict[str, jax.ShapeDtypeStruct]:
+    def param_shapes(self) -> dict[str, Any]:
+        """Per-group param-state structure: a ShapeDtypeStruct for flat
+        stores (fp32 -- the seed's format -- or bf16), a dict of structs
+        (codes/master/scales) for quantized stores."""
         out = {}
         for name, lo in self.layouts.items():
-            out[name] = jax.ShapeDtypeStruct(
-                lo.global_shape(), jnp.float32,
-                sharding=NamedSharding(self.mesh, lo.pspec()),
-            )
+            out[name] = lo.store.state_struct(
+                lo.global_shape(), NamedSharding(self.mesh, lo.pspec()))
         return out
 
     @staticmethod
@@ -221,9 +245,10 @@ class FSDPRuntime:
                     packs.append(lo.buffer.pack(arrays))
                 flats.append(np.concatenate(packs))
             arr = np.stack(flats) if lo.n_layers else flats[0]
-            params[name] = jax.device_put(
-                arr, NamedSharding(self.mesh, lo.pspec())
-            )
+            sharding = NamedSharding(self.mesh, lo.pspec())
+            params[name] = jax.tree.map(
+                lambda a: jax.device_put(a, sharding),
+                lo.store.create(arr))
         return params
 
     # ------------------------------------------------------------------ #
@@ -232,9 +257,11 @@ class FSDPRuntime:
     def _getter(self, local_bufs: Mapping[str, jax.Array], remat: bool = True):
         return _ParamGetter(self, local_bufs, remat)
 
-    # specs for shard_map
-    def _param_specs(self) -> dict[str, P]:
-        return {n: lo.pspec() for n, lo in self.layouts.items()}
+    # specs for shard_map (a pspec per state leaf; scales shard like the
+    # buffer because S % block == 0)
+    def _param_specs(self) -> dict[str, Any]:
+        return {n: lo.store.state_pspecs(lo.pspec())
+                for n, lo in self.layouts.items()}
 
     def _usable_batch_axes(self, batch: int) -> tuple[str, ...]:
         """Longest prefix of batch axes that evenly divides ``batch`` --
@@ -270,7 +297,19 @@ class FSDPRuntime:
 
         def step_fn(params, opt_state, step, batch):
             def sharded(params, opt_state, step, batch):
-                def loss_of(bufs, mb):
+                # split each group's store state into the differentiable
+                # part (the master/storage buffer the grads target) and the
+                # frozen payload (q8 codes/scales, closed over as
+                # constants).  For fp32 stores trainable IS the params dict,
+                # so the autodiff graph is unchanged from the seed.
+                trainable = {n: self.layouts[n].store.trainable(params[n])
+                             for n in params}
+                frozen = {n: self.layouts[n].store.frozen(params[n])
+                          for n in params}
+
+                def loss_of(tr, mb):
+                    bufs = {n: self.layouts[n].store.combine(tr[n], frozen[n])
+                            for n in tr}
                     pg = self._getter(bufs)
                     nll, w = self.model.loss(pg, mb)
                     return nll, w
@@ -285,19 +324,19 @@ class FSDPRuntime:
                     def micro_body(acc, mb):
                         grads, nll_a, w_a = acc
                         (nll, w), g = jax.value_and_grad(
-                            loss_of, has_aux=True)(params, mb)
+                            loss_of, has_aux=True)(trainable, mb)
                         grads = jax.tree.map(jnp.add, grads, g)
                         return (grads, nll_a + nll, w_a + w), None
 
                     mbs = jax.tree.map(
                         lambda t: t.reshape((micro, t.shape[0] // micro)
                                             + t.shape[1:]), batch)
-                    zero = jax.tree.map(jnp.zeros_like, params)
+                    zero = jax.tree.map(jnp.zeros_like, trainable)
                     (grads, nll, w), _ = lax.scan(
                         micro_body, (zero, 0.0, 0.0), mbs)
                 else:
                     (nll, w), grads = jax.value_and_grad(
-                        loss_of, has_aux=True)(params, batch)
+                        loss_of, has_aux=True)(trainable, batch)
 
                 # cross-device normalization
                 nll_g = lax.psum(nll, self.batch_axes) if self.batch_axes else nll
@@ -388,6 +427,25 @@ class FSDPRuntime:
             main_slots = (2 if plan.prefetch else 1) if plan.main else 0
             slots = main_slots + int(plan.split_last)
         return per_layer * slots
+
+    def gather_wire_bytes(self) -> int:
+        """Analytic bytes the parameter all-gathers of ONE forward pass put
+        on the wire, per gathered copy: the quantity the q8_block store cuts
+        ~4x vs an fp32 wire (codes are 1 byte/element + 4 bytes per block of
+        scales vs 4 bytes/element).  Schedule-unsharded and single-group
+        replicated buffers move nothing; backward re-gathers (remat) and
+        the (m-1)/m ring discount apply uniformly across formats, so they
+        are deliberately left out of the ratio."""
+        cd = jnp.dtype(self.compute_dtype)
+        total = 0
+        for name, lo in self.layouts.items():
+            if not lo.fsdp_axes:
+                continue
+            sched = self.sched_for(name)
+            per_layer = lo.store.wire_bytes(lo.plan.total,
+                                            sched.wire_dtype(cd))
+            total += per_layer * (lo.n_layers or 1)
+        return total
 
     # ------------------------------------------------------------------ #
     # serving steps (ZeRO-3 inference: per-layer gather, sharded at rest)
@@ -493,17 +551,17 @@ class _ParamGetter:
         self.ep_axis = runtime.ep_axis
         self.compute_dtype = runtime.compute_dtype
 
-    def _gather_flat(self, name: str, local: jax.Array) -> jax.Array:
-        """All-gather one group buffer per its (possibly group-overridden)
-        schedule's gather mode and wire/reduce dtypes (backward = the
-        ZeRO-3 gradient reduce-scatter)."""
+    def _gather_flat(self, name: str, local) -> jax.Array:
+        """All-gather one group's store state per its (possibly
+        group-overridden) schedule -- gather mode, wire/reduce dtypes, and
+        storage format (backward = the ZeRO-3 gradient reduce-scatter onto
+        the store's trainable buffer).  ``local`` is the device-local state:
+        a flat slice for fp32/bf16 stores, a codes/master/scales dict for
+        q8_block (the quantized wire)."""
         lo = self.rt.layouts[name]
-        sched = self.rt.sched_for(name)
-        cd = jnp.dtype(self.rt.compute_dtype)
-        return sharded_gather(
-            local, lo.fsdp_axes, lo.fsdp_axis_sizes, sched.wire_dtype(cd),
-            sched.accum_dtype(cd), cd, jnp.dtype(local.dtype),
-            sched.gather_mode)
+        return lo.store.gather(
+            local, lo.fsdp_axes, lo.fsdp_axis_sizes, self.rt.sched_for(name),
+            self.rt.compute_dtype)
 
     def _gather_unpack(self, name: str, local: jax.Array):
         return self.rt.layouts[name].buffer.unpack(
@@ -562,7 +620,9 @@ class _ParamGetter:
                  else compute)
 
         def slices(lo, hi):
-            return (tuple(s[lo:hi] for s in stacks),
+            # stacks entries are store states (arrays or code/scale trees)
+            return (tuple(jax.tree.map(lambda t: t[lo:hi], s)
+                          for s in stacks),
                     jax.tree.map(lambda t: t[lo:hi], xs))
 
         def seq_scan(carry, lo, hi):
@@ -581,17 +641,21 @@ class _ParamGetter:
         ys_parts = []
         if plan.prefetch:
             k = 2 * plan.pairs
-            pair_bufs = tuple(
-                s[:k].reshape((plan.pairs, 2) + s.shape[1:]) for s in stacks)
-            pair_xs = jax.tree.map(
-                lambda t: t[:k].reshape((plan.pairs, 2) + t.shape[1:]), xs)
+
+            def to_pairs(t):
+                return t[:k].reshape((plan.pairs, 2) + t.shape[1:])
+
+            pair_bufs = tuple(jax.tree.map(to_pairs, s) for s in stacks)
+            pair_xs = jax.tree.map(to_pairs, xs)
 
             def pair_body(c, scan_xs):
                 bufs2, xs2 = scan_xs
                 # two-slot double buffer: issue both slots' gathers before
                 # either layer's compute (slot 1 overlaps slot 0's compute)
-                g0 = gather_layer(tuple(b[0] for b in bufs2))
-                g1 = gather_layer(tuple(b[1] for b in bufs2))
+                g0 = gather_layer(tuple(
+                    jax.tree.map(lambda t: t[0], b) for b in bufs2))
+                g1 = gather_layer(tuple(
+                    jax.tree.map(lambda t: t[1], b) for b in bufs2))
                 c, y0 = inner(g0, c, jax.tree.map(lambda t: t[0], xs2))
                 # materialize the carry at the layer seam exactly as a
                 # per-layer scan-iteration boundary would (bitwise parity

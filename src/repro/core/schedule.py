@@ -61,6 +61,28 @@ surface of production FSDP:
                           gradient psums (HSDP cross-pod, TP-replicated
                           groups, unsharded groups) in
                           ``FSDPRuntime._reduce_grads``.
+  * ``reduce_mode``    -- "match" (default): the gradient reduce-scatter
+                          mirrors the gather mode (psum_scatter for xla, the
+                          order-exact ring for ring) and stays bitwise
+                          identical to XLA's linear-device-order reduction.
+                          "ring_acc": accumulate-in-flight ring
+                          reduce-scatter -- each chunk's partial sum rides
+                          the ring and every hop adds the local contribution,
+                          so wire volume is n-1 chunk-hops instead of the
+                          order-exact ring's n(n-1)/2.  The price is the
+                          reduction order (ring order, not XLA's linear
+                          device order), so results are allclose- but not
+                          bitwise-reproducible vs the xla/match path.
+  * ``param_store``    -- storage format of the group's sharded buffer (see
+                          ``core.store.ParamStore``): "fp32" (master
+                          weights, today's format), "bf16" (half-size
+                          storage, bf16 wire), or "q8_block" (block-wise
+                          INT8 codes + per-block absmax scales alongside an
+                          fp32 master shard; the all-gather moves codes +
+                          scales -- ~4x fewer wire bytes than fp32 -- and
+                          dequantizes locally; gradients reduce-scatter to
+                          the fp32 master, which the optimizer updates and
+                          requantizes in the same fused pass).
   * ``sharded``        -- per-group knob (see below): False keeps the
                           group's flat buffer replicated instead of
                           FSDP-sharding it.  No gather is emitted at all;
@@ -115,6 +137,13 @@ _DTYPES = {
 }
 
 _GATHER_MODES = ("xla", "ring")
+_REDUCE_MODES = ("match", "ring_acc")
+
+# Storage formats a group's sharded buffer can take (core.store.ParamStore).
+# Defined here (not in store.py) because the format is a schedule knob --
+# validated by CommSchedule -- and store.py imports this module's gather
+# primitives, so the dependency must point this way.
+STORE_FORMATS = ("fp32", "bf16", "q8_block")
 
 # Per-group schedule override surface (ParallelConfig.group_schedules /
 # FSDPRuntime(group_schedules=...)).  Scan-structure knobs are deliberately
@@ -122,7 +151,8 @@ _GATHER_MODES = ("xla", "ring")
 # reshard / keep_last must agree across them and come from the base
 # schedule.
 GROUP_OVERRIDE_KEYS = frozenset(
-    {"gather_mode", "gather_dtype", "reduce_dtype", "sharded"})
+    {"gather_mode", "gather_dtype", "reduce_dtype", "sharded",
+     "reduce_mode", "param_store"})
 
 
 def _check_name(name: str | None) -> None:
@@ -171,6 +201,8 @@ class CommSchedule:
     gather_dtype: str | None = None
     reduce_dtype: str | None = None
     gather_mode: str = "xla"
+    reduce_mode: str = "match"
+    param_store: str = "fp32"
     sharded: bool = True
 
     def __post_init__(self):
@@ -182,6 +214,14 @@ class CommSchedule:
             raise ValueError(
                 f"unknown gather_mode {self.gather_mode!r}; expected one of "
                 f"{list(_GATHER_MODES)}")
+        if self.reduce_mode not in _REDUCE_MODES:
+            raise ValueError(
+                f"unknown reduce_mode {self.reduce_mode!r}; expected one of "
+                f"{list(_REDUCE_MODES)}")
+        if self.param_store not in STORE_FORMATS:
+            raise ValueError(
+                f"unknown param_store {self.param_store!r}; expected one of "
+                f"{list(STORE_FORMATS)}")
 
     @classmethod
     def default(cls) -> "CommSchedule":
@@ -197,6 +237,8 @@ class CommSchedule:
             gather_dtype=par.gather_dtype,
             reduce_dtype=par.reduce_dtype,
             gather_mode=par.gather_mode,
+            reduce_mode=par.reduce_mode,
+            param_store=par.param_store,
         )
 
     def wire_dtype(self, compute_dtype) -> jnp.dtype:
@@ -218,6 +260,11 @@ class CommSchedule:
                     f"schedule {role} dtype resolves to unsupported {dt} "
                     f"(compute dtype {jnp.dtype(compute_dtype)}); supported: "
                     f"{sorted(set(_DTYPES))}")
+        if self.param_store == "q8_block" and self.gather_dtype is not None:
+            raise ValueError(
+                "param_store='q8_block' fixes the all-gather payload (int8 "
+                "codes + fp32 scales); gather_dtype must stay None, got "
+                f"{self.gather_dtype!r}")
 
     def plan_layers(self, n_layers: int, remat: bool = True) -> LayerPlan:
         """Resolve the scan structure for an ``n_layers`` stack (see
@@ -237,6 +284,8 @@ class CommSchedule:
                 f"reshard={int(self.reshard_after_forward)} "
                 f"keep_last={int(self.keep_last_gathered)} "
                 f"mode={self.gather_mode} "
+                f"rmode={self.reduce_mode} "
+                f"store={self.param_store} "
                 f"gather={self.gather_dtype or 'compute'} "
                 f"reduce={self.reduce_dtype or 'wire'}")
 
@@ -278,6 +327,19 @@ VARIANTS: dict[str, CommSchedule] = {
     "ring_overlap": CommSchedule(gather_mode="ring", prefetch=True,
                                  keep_last_gathered=True,
                                  reduce_dtype="fp32"),
+}
+
+# Variants that change *numerics*, not just the comm path: ring_acc reduces
+# in ring order (allclose to, not bitwise with, XLA's linear order) and the
+# quantized store trains on block-dequantized weights.  Kept out of VARIANTS
+# so the bitwise parity suite stays honest; benchmarks and their own parity
+# tests (allclose / self-consistency) iterate these separately.
+APPROX_VARIANTS: dict[str, CommSchedule] = {
+    "ring_acc": CommSchedule(gather_mode="ring", reduce_mode="ring_acc",
+                             reduce_dtype="fp32"),
+    "q8_store": CommSchedule(param_store="q8_block"),
+    "q8_ring_prefetch": CommSchedule(param_store="q8_block",
+                                     gather_mode="ring", prefetch=True),
 }
 
 
@@ -353,20 +415,66 @@ def _ring_reduce_scatter(ct, axes: tuple[str, ...],
     return total.astype(ct.dtype)
 
 
+def _ring_acc_reduce_scatter(ct, axes: tuple[str, ...],
+                             axis_sizes: tuple[int, ...]):
+    """Accumulate-in-flight ring reduce-scatter (reduce_mode="ring_acc").
+
+    One partial sum per destination chunk rides the ring: the chain for
+    device ``d`` starts at ``d-1`` and every hop adds the local
+    contribution, so the wire carries n-1 chunk-hops total -- the bandwidth-
+    optimal ring -- vs the order-exact ring's n(n-1)/2 un-reduced chunks.
+    The accumulation order is ring order (d-1, d-2, ..., d+1, d), NOT XLA's
+    absolute device order, and it runs in the dtype ``ct`` arrives in (the
+    schedule's reduce dtype): results are allclose to, but not bitwise
+    reproducible against, the match-mode reduce-scatter."""
+    n = math.prod(axis_sizes)
+    if n == 1:
+        return ct
+    ax = _ring_axis(axes)
+    idx = lax.axis_index(ax)
+    perm = [((i + 1) % n, i) for i in range(n)]  # receive from the right
+    c = ct.shape[0] // n
+    chunks = ct.reshape((n, c) + ct.shape[1:])
+    # pre-rotate so row j holds this device's contribution to device idx+j:
+    # every add below is then a *static* row index
+    chunks = jnp.roll(chunks, -idx, axis=0)
+    acc = chunks[1 % n]  # chain I initiate, destined for device idx+1
+    for k in range(2, n + 1):
+        # receive the partial destined for idx+k, add my contribution;
+        # k == n wraps to row 0 (my own chunk, last to be added)
+        acc = lax.ppermute(acc, ax, perm)
+        acc = acc + chunks[k % n]
+    return acc
+
+
 # --------------------------------------------------------------------------- #
 # the gather/reduce-scatter primitive
 # --------------------------------------------------------------------------- #
-@partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4, 5, 6, 7))
+def _reduce_scatter(g, axes, axis_sizes, mode, reduce_mode):
+    """The gradient reduce-scatter all stores share: accumulate-in-flight
+    ring when reduce_mode says so, else the gather mode's bitwise-exact
+    match (psum_scatter for xla, the order-exact ring for ring)."""
+    if not axes:
+        return g
+    if reduce_mode == "ring_acc":
+        return _ring_acc_reduce_scatter(g, axes, axis_sizes)
+    if mode == "ring":
+        return _ring_reduce_scatter(g, axes, axis_sizes)
+    return lax.psum_scatter(g, axes, scatter_dimension=0, tiled=True)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4, 5, 6, 7, 8))
 def sharded_gather(x, axes, axis_sizes, wire_dtype, reduce_dtype, out_dtype,
-                   param_dtype, mode):
+                   param_dtype, mode, reduce_mode):
     """All-gather ``x`` (a device-local flat buffer slice, leading axis
     tiled) over the FSDP mesh ``axes`` (sizes ``axis_sizes``).
 
     forward:  cast to ``wire_dtype`` -> all-gather (xla collective or
               explicit ppermute ring, per ``mode``) -> cast to ``out_dtype``
     backward: cast cotangent to ``reduce_dtype`` -> reduce-scatter (the
-              ZeRO-3 gradient reduce-scatter; psum_scatter or the matching
-              ring) -> cast to ``param_dtype``
+              ZeRO-3 gradient reduce-scatter; psum_scatter, the matching
+              ring, or the accumulate-in-flight ring per ``reduce_mode``)
+              -> cast to ``param_dtype``
     """
     y = x.astype(wire_dtype)
     if axes:
@@ -376,21 +484,64 @@ def sharded_gather(x, axes, axis_sizes, wire_dtype, reduce_dtype, out_dtype,
 
 
 def _gather_fwd(x, axes, axis_sizes, wire_dtype, reduce_dtype, out_dtype,
-                param_dtype, mode):
+                param_dtype, mode, reduce_mode):
     return (
         sharded_gather(x, axes, axis_sizes, wire_dtype, reduce_dtype,
-                       out_dtype, param_dtype, mode),
+                       out_dtype, param_dtype, mode, reduce_mode),
         None,
     )
 
 
 def _gather_bwd(axes, axis_sizes, wire_dtype, reduce_dtype, out_dtype,
-                param_dtype, mode, _res, ct):
-    g = ct.astype(reduce_dtype)
-    if axes:
-        g = (_ring_reduce_scatter(g, axes, axis_sizes) if mode == "ring"
-             else lax.psum_scatter(g, axes, scatter_dimension=0, tiled=True))
+                param_dtype, mode, reduce_mode, _res, ct):
+    g = _reduce_scatter(ct.astype(reduce_dtype), axes, axis_sizes, mode,
+                        reduce_mode)
     return (g.astype(param_dtype),)
 
 
 sharded_gather.defvjp(_gather_fwd, _gather_bwd)
+
+
+# --------------------------------------------------------------------------- #
+# store-payload primitives (quantized-wire gathers, core.store.ParamStore)
+# --------------------------------------------------------------------------- #
+def payload_all_gather(x, axes, axis_sizes, mode):
+    """Pure data-movement all-gather for non-differentiable store payloads
+    (int8 codes, per-block scales): gathered in ``x``'s own dtype, no VJP --
+    gradients for a quantized store flow through ``gather_grad_proxy``
+    instead (straight-through to the master shard)."""
+    x = lax.stop_gradient(x)
+    if not axes:
+        return x
+    return (_ring_all_gather(x, axes, axis_sizes) if mode == "ring"
+            else lax.all_gather(x, axes, tiled=True))
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4, 5, 6, 7))
+def gather_grad_proxy(x, axes, axis_sizes, reduce_dtype, out_dtype,
+                      param_dtype, mode, reduce_mode):
+    """Straight-through gradient route for quantized stores.
+
+    forward: zeros of the gathered shape (no collective, no wire bytes) --
+    added to the dequantized payload so the gathered weights' value comes
+    from the codes while the gradient flows here.  backward: the standard
+    ZeRO-3 reduce-scatter of the cotangent to ``param_dtype`` (the master
+    shard's dtype), exactly as ``sharded_gather``'s backward."""
+    n = math.prod(axis_sizes) if axes else 1
+    return jnp.zeros((n * x.shape[0],) + x.shape[1:], out_dtype)
+
+
+def _proxy_fwd(x, axes, axis_sizes, reduce_dtype, out_dtype, param_dtype,
+               mode, reduce_mode):
+    return (gather_grad_proxy(x, axes, axis_sizes, reduce_dtype, out_dtype,
+                              param_dtype, mode, reduce_mode), None)
+
+
+def _proxy_bwd(axes, axis_sizes, reduce_dtype, out_dtype, param_dtype, mode,
+               reduce_mode, _res, ct):
+    g = _reduce_scatter(ct.astype(reduce_dtype), axes, axis_sizes, mode,
+                        reduce_mode)
+    return (g.astype(param_dtype),)
+
+
+gather_grad_proxy.defvjp(_proxy_fwd, _proxy_bwd)

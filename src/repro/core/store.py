@@ -1,0 +1,217 @@
+"""ParamStore: the storage format of a group's sharded parameter buffer.
+
+The seed runtime hard-coded one format -- an fp32 flat master buffer -- into
+``FSDPRuntime`` (``param_shapes`` pinned ``jnp.float32``, optimizers assumed
+``params[name]`` was the fp32 weights, the checkpoint saved one array per
+group).  The paper's flexibility claim, though, is that RaggedShard
+"empowers block-wise quantized training": the storage/communication format
+of a group is a *policy*, not a constant.  ``ParamStore`` makes it one layer
+(SimpleFSDP's argument: keep the format a traceable, compile-friendly
+transformation rather than ad-hoc branches):
+
+  * ``fp32``      -- one fp32 flat buffer; master weights == stored weights.
+                     Every path is bitwise identical to the pre-store
+                     runtime (``master_f32``/``rebuild`` are identity and
+                     ``gather`` is exactly ``sharded_gather``).
+  * ``bf16``      -- one bf16 flat buffer (half the parameter memory, bf16
+                     native on the wire).  The optimizer computes in fp32
+                     and rounds the result back to bf16.
+  * ``q8_block``  -- block-wise INT8: the state is ``{"codes", "master",
+                     "scales"}`` -- int8 codes + one fp32 absmax scale per
+                     ``block`` contiguous elements (quant/blockwise.py),
+                     alongside the fp32 master shard (QSDP-style: quantized
+                     weights travel, fp32 masters stay sharded).  The
+                     all-gather moves codes + scales (~4x fewer wire bytes
+                     than fp32) and dequantizes locally; gradients take the
+                     straight-through route (``gather_grad_proxy``) and
+                     reduce-scatter onto the fp32 master, which the
+                     optimizer updates and requantizes in the same fused
+                     pass.  The planner's ``align`` guarantee (tensor starts
+                     and the shard size are multiples of ``block``) makes
+                     the per-shard quantization communication-free: no quant
+                     block ever straddles a device boundary.
+
+A store *state* is what ``params[name]`` holds for one group: a bare array
+for flat formats, a dict of arrays for ``q8_block``.  The runtime never
+inspects the format outside this module -- it asks the store to split the
+state into the differentiable part (``trainable``: the master/storage
+buffer, whose grads the optimizer consumes) and the non-differentiable rest
+(``frozen``: codes/scales), to gather a compute-dtype flat buffer, and to
+rebuild a state from updated fp32 master values.
+
+The format is selected by ``CommSchedule.param_store`` (global default via
+``ParallelConfig.param_store``, per-group via ``group_schedules``) and
+validated by ``CommSchedule.validate_for``; see DESIGN.md §ParamStore.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..quant.blockwise import dequantize_blockwise, quantize_blockwise
+from .schedule import (STORE_FORMATS, CommSchedule, gather_grad_proxy,
+                       payload_all_gather, sharded_gather)
+
+# q8_block state keys, in tree-sorted order (dict iteration order of the
+# states the store builds; checkpoints rely on the names, not the order)
+Q8_KEYS = ("codes", "master", "scales")
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamStore:
+    """Storage-format policy for one communication group's buffer."""
+
+    fmt: str = "fp32"
+    block: int = 1024  # quant block (flat elements) for q8_block
+
+    def __post_init__(self):
+        if self.fmt not in STORE_FORMATS:
+            raise ValueError(
+                f"unknown param_store {self.fmt!r}; expected one of "
+                f"{list(STORE_FORMATS)}")
+        if self.block < 1:
+            raise ValueError(f"quant block must be >= 1, got {self.block}")
+
+    # ------------------------------------------------------------------ #
+    # format properties
+    # ------------------------------------------------------------------ #
+    @property
+    def quantized(self) -> bool:
+        return self.fmt == "q8_block"
+
+    @property
+    def storage_dtype(self) -> jnp.dtype:
+        """Dtype of the differentiable (trainable) buffer."""
+        return jnp.dtype(jnp.bfloat16 if self.fmt == "bf16" else jnp.float32)
+
+    def align(self) -> int:
+        """Planner alignment this store needs: quantized stores pin tensor
+        starts and the shard size to the quant block so fixed tiles over the
+        local shard never straddle a tensor start or a device boundary."""
+        return self.block if self.quantized else 1
+
+    # ------------------------------------------------------------------ #
+    # state structure
+    # ------------------------------------------------------------------ #
+    def _scales_shape(self, shape: tuple[int, ...]) -> tuple[int, ...]:
+        if shape[-1] % self.block:
+            raise ValueError(
+                f"buffer last dim {shape[-1]} not a multiple of quant block "
+                f"{self.block} -- planner align missing?")
+        return shape[:-1] + (shape[-1] // self.block,)
+
+    def state_struct(self, shape: tuple[int, ...], sharding):
+        """ShapeDtypeStruct tree of one group's param state (``sharding``
+        applies to every leaf: scales shard evenly because S % block == 0)."""
+        def sds(shp, dt):
+            return jax.ShapeDtypeStruct(shp, dt, sharding=sharding)
+
+        if not self.quantized:
+            return sds(shape, self.storage_dtype)
+        return {
+            "codes": sds(shape, jnp.int8),
+            "master": sds(shape, jnp.float32),
+            "scales": sds(self._scales_shape(shape), jnp.float32),
+        }
+
+    def state_pspecs(self, pspec):
+        """PartitionSpec tree matching ``state_struct`` (all leaves shard
+        identically along the flat buffer axis)."""
+        if not self.quantized:
+            return pspec
+        return {k: pspec for k in Q8_KEYS}
+
+    # ------------------------------------------------------------------ #
+    # host-side construction (init / checkpoint restore)
+    # ------------------------------------------------------------------ #
+    def create(self, master_f32: np.ndarray):
+        """Build a state from a host-side fp32 global buffer."""
+        if self.fmt == "fp32":
+            return np.asarray(master_f32, np.float32)
+        if self.fmt == "bf16":
+            return np.asarray(jnp.asarray(master_f32).astype(jnp.bfloat16))
+        master = np.asarray(master_f32, np.float32)
+        codes, scales = quantize_blockwise(jnp.asarray(master), self.block)
+        return {"codes": np.asarray(codes), "master": master,
+                "scales": np.asarray(scales)}
+
+    # ------------------------------------------------------------------ #
+    # traced views (inside shard_map, on device-local shards)
+    # ------------------------------------------------------------------ #
+    def trainable(self, state):
+        """The differentiable leaf: what ``jax.grad`` runs against and what
+        the gradient reduce-scatter targets (the master for q8_block)."""
+        return state["master"] if self.quantized else state
+
+    def frozen(self, state):
+        """The non-differentiable rest of the state (closed over by the
+        loss as constants); None for flat formats."""
+        if not self.quantized:
+            return None
+        return {"codes": state["codes"], "scales": state["scales"]}
+
+    def combine(self, trainable, frozen):
+        """Inverse of (trainable, frozen): the full state again."""
+        if not self.quantized:
+            return trainable
+        return {"codes": frozen["codes"], "master": trainable,
+                "scales": frozen["scales"]}
+
+    def master_f32(self, state) -> jax.Array:
+        """fp32 view of the weights the optimizer updates.  For fp32 this is
+        the state itself (no cast: bitwise-identical update graph)."""
+        if self.quantized:
+            return state["master"]
+        return state if state.dtype == jnp.float32 else state.astype(
+            jnp.float32)
+
+    def rebuild(self, new_master_f32: jax.Array):
+        """State from updated fp32 master values -- for q8_block this is the
+        requantize fused into the same optimizer pass."""
+        if self.fmt == "fp32":
+            return new_master_f32
+        if self.fmt == "bf16":
+            return new_master_f32.astype(jnp.bfloat16)
+        codes, scales = quantize_blockwise(new_master_f32, self.block)
+        return {"codes": codes, "master": new_master_f32, "scales": scales}
+
+    # ------------------------------------------------------------------ #
+    # the gather (what the schedule moves for this format)
+    # ------------------------------------------------------------------ #
+    def gather(self, state, axes: tuple[str, ...],
+               axis_sizes: tuple[int, ...], sched: CommSchedule,
+               compute_dtype) -> jax.Array:
+        """All-gather one device-local state into the flat compute-dtype
+        buffer the model unpacks.  Flat formats go through
+        ``sharded_gather`` (whose backward is the ZeRO-3 reduce-scatter);
+        q8_block gathers codes + scales (the quantized wire), dequantizes
+        locally, and routes gradients straight-through to the master shard
+        via ``gather_grad_proxy``."""
+        cd = jnp.dtype(compute_dtype)
+        if not self.quantized:
+            return sharded_gather(
+                state, axes, axis_sizes, sched.wire_dtype(cd),
+                sched.accum_dtype(cd), cd, jnp.dtype(state.dtype),
+                sched.gather_mode, sched.reduce_mode)
+        codes = payload_all_gather(state["codes"], axes, axis_sizes,
+                                   sched.gather_mode)
+        scales = payload_all_gather(state["scales"], axes, axis_sizes,
+                                    sched.gather_mode)
+        deq = dequantize_blockwise(codes, scales, self.block).astype(cd)
+        return deq + gather_grad_proxy(
+            state["master"], axes, axis_sizes, sched.accum_dtype(cd), cd,
+            jnp.dtype(jnp.float32), sched.gather_mode, sched.reduce_mode)
+
+    # ------------------------------------------------------------------ #
+    # accounting
+    # ------------------------------------------------------------------ #
+    def wire_bytes(self, n_elements: int, wire_dtype) -> int:
+        """Bytes one all-gather of an ``n_elements`` buffer puts on the
+        wire in this format (per gathered copy; the ~4x q8-vs-fp32 drop
+        ``bench_e2e --schedule`` reports)."""
+        if not self.quantized:
+            return n_elements * jnp.dtype(wire_dtype).itemsize
+        return n_elements + (n_elements // self.block) * 4  # codes + scales

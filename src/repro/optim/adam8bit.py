@@ -50,7 +50,9 @@ class Adam8bit(OptimizerBase):
         bq = self.block
         new_p = {}
         new_s = {k: {} for k in ("m8", "v8", "ms", "vs")}
-        for name, w in params.items():
+        for name, pstate in params.items():
+            store = runtime.layouts[name].store
+            w = store.master_f32(pstate)
             g = grads[name].astype(jnp.float32)
             # m: signed linear int8; v: log-space int8 (dynamic range --
             # linear quantization underflows v and explodes the update)
@@ -61,7 +63,7 @@ class Adam8bit(OptimizerBase):
             v = self.b2 * v + (1 - self.b2) * g * g
             upd = (m / c1) / (jnp.sqrt(v / c2) + self.eps)
             wdm = matrix_mask_local(runtime, runtime.layouts[name], w.shape)
-            new_p[name] = w - lr * (upd + self.wd * wdm * w)
+            new_p[name] = store.rebuild(w - lr * (upd + self.wd * wdm * w))
             m8, ms = quantize_blockwise(m, bq)
             v8, vs = quantize_blockwise_log(v, bq)
             new_s["m8"][name], new_s["ms"][name] = m8, ms

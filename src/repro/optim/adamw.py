@@ -1,4 +1,10 @@
-"""AdamW on flat DBuffer shards (fp32 master weights, group-fused update)."""
+"""AdamW on flat DBuffer shards (fp32 master weights, group-fused update).
+
+The master weights come from each group's ParamStore (``master_f32`` is the
+buffer itself for fp32 stores -- bitwise-identical update graph -- and the
+fp32 master shard for q8_block); ``rebuild`` writes the update back in the
+group's storage format, requantizing codes/scales in the same fused pass
+for quantized stores."""
 from __future__ import annotations
 
 import jax.numpy as jnp
@@ -19,12 +25,14 @@ class AdamW(OptimizerBase):
         c1 = 1.0 - self.b1 ** t
         c2 = 1.0 - self.b2 ** t
         new_p, new_m, new_v = {}, {}, {}
-        for name, w in params.items():
+        for name, pstate in params.items():
+            store = runtime.layouts[name].store
+            w = store.master_f32(pstate)
             g = grads[name].astype(jnp.float32)
             m = self.b1 * state["m"][name] + (1 - self.b1) * g
             v = self.b2 * state["v"][name] + (1 - self.b2) * g * g
             upd = (m / c1) / (jnp.sqrt(v / c2) + self.eps)
             wdm = matrix_mask_local(runtime, runtime.layouts[name], w.shape)
-            new_p[name] = w - lr * (upd + self.wd * wdm * w)
+            new_p[name] = store.rebuild(w - lr * (upd + self.wd * wdm * w))
             new_m[name], new_v[name] = m, v
         return new_p, {"m": new_m, "v": new_v}

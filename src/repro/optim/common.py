@@ -5,6 +5,15 @@ buffer, so every update is one group-fused elementwise pass (the DBuffer
 batched-kernel claim of the paper).  Per-tensor behavior (weight decay only
 on matrices, Muon only on 2D params) is recovered from the static plan via
 position masks computed from the device's linear FSDP index.
+
+Storage formats: ``params[name]`` is a ParamStore *state* (core.store) --
+the flat buffer itself for fp32/bf16 stores, a codes/master/scales dict for
+q8_block.  Every optimizer reads the fp32 weights through
+``layout.store.master_f32`` (identity for fp32: the update graph stays
+bitwise-identical to the pre-store runtime) and writes them back through
+``layout.store.rebuild``, which requantizes codes/scales inside the same
+fused update pass for quantized stores.  Optimizer *state* (m/v/moments) is
+always master-shaped, independent of the store format.
 """
 from __future__ import annotations
 

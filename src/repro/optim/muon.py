@@ -93,8 +93,9 @@ class Muon(OptimizerBase):
         c2 = 1.0 - self.b2 ** t
         new_p = {}
         new_s = {"mom": {}, "m": {}, "v": {}}
-        for name, w in params.items():
+        for name, pstate in params.items():
             lo = runtime.layouts[name]
+            w = lo.store.master_f32(pstate)
             g = grads[name].astype(jnp.float32)
             mom = self.mu * state["mom"][name] + g
             m = self.b1 * state["m"][name] + (1 - self.b1) * g
@@ -111,7 +112,8 @@ class Muon(OptimizerBase):
                 upd = mask2d * muon_upd + (1 - mask2d) * adam_upd
             else:
                 upd = adam_upd
-            new_p[name] = w - lr * (upd + self.wd * mask2d * w)
+            new_p[name] = lo.store.rebuild(
+                w - lr * (upd + self.wd * mask2d * w))
             new_s["mom"][name] = mom
             new_s["m"][name], new_s["v"][name] = m, v
         return new_p, new_s

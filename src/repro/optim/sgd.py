@@ -16,9 +16,11 @@ class SGDMomentum(OptimizerBase):
     def update(self, runtime, params, grads, state, step):
         lr = self.schedule(step)
         new_p, new_m = {}, {}
-        for name, w in params.items():
+        for name, pstate in params.items():
+            store = runtime.layouts[name].store
+            w = store.master_f32(pstate)
             g = grads[name].astype(jnp.float32)
             m = self.mu * state["m"][name] + g
-            new_p[name] = w - lr * m
+            new_p[name] = store.rebuild(w - lr * m)
             new_m[name] = m
         return new_p, {"m": new_m}

@@ -135,8 +135,9 @@ class Shampoo(OptimizerBase):
         c2 = 1.0 - 0.95 ** t
         new_p = {}
         new_s = {"mom": {}, "m": {}, "v": {}, "factors": dict(state["factors"])}
-        for name, w in params.items():
+        for name, pstate in params.items():
             lo = runtime.layouts[name]
+            w = lo.store.master_f32(pstate)
             g = grads[name].astype(jnp.float32)
             m = 0.9 * state["m"][name] + 0.1 * g
             v = 0.95 * state["v"][name] + 0.05 * g * g
@@ -153,7 +154,8 @@ class Shampoo(OptimizerBase):
             else:
                 mom = state["mom"][name]
                 upd = adam_upd
-            new_p[name] = w - lr * (upd + self.wd * mask2d * w)
+            new_p[name] = lo.store.rebuild(
+                w - lr * (upd + self.wd * mask2d * w))
             new_s["mom"][name] = mom
             new_s["m"][name], new_s["v"][name] = m, v
         return new_p, new_s

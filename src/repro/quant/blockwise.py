@@ -14,11 +14,21 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 
+def _check_blocking(n: int, block: int, who: str) -> None:
+    """Shape validation that survives ``python -O`` (these are API
+    contracts, not internal invariants, so no bare asserts)."""
+    if block < 1:
+        raise ValueError(f"{who}: block must be >= 1, got {block}")
+    if n % block != 0:
+        raise ValueError(
+            f"{who}: last dim {n} not divisible by block {block}")
+
+
 def quantize_blockwise(x, block: int):
     """x: (..., n) float, n % block == 0.
     Returns (codes int8 (..., n), scales f32 (..., n // block))."""
     n = x.shape[-1]
-    assert n % block == 0, (n, block)
+    _check_blocking(n, block, "quantize_blockwise")
     xb = x.reshape(x.shape[:-1] + (n // block, block)).astype(jnp.float32)
     absmax = jnp.max(jnp.abs(xb), axis=-1)
     scale = absmax / 127.0
@@ -29,6 +39,11 @@ def quantize_blockwise(x, block: int):
 
 def dequantize_blockwise(codes, scales, block: int):
     n = codes.shape[-1]
+    _check_blocking(n, block, "dequantize_blockwise")
+    if scales.shape[-1] != n // block:
+        raise ValueError(
+            f"dequantize_blockwise: scales last dim {scales.shape[-1]} != "
+            f"{n // block} blocks")
     cb = codes.reshape(codes.shape[:-1] + (n // block, block)).astype(jnp.float32)
     out = cb * scales[..., None]
     return out.reshape(codes.shape)
@@ -48,7 +63,7 @@ RANGE_NATS = 24.0  # ~1e-10 relative dynamic range, ~19% relative resolution
 def quantize_blockwise_log(x, block: int):
     """x >= 0, (..., n).  Returns (codes int8 in [0,127], scales f32)."""
     n = x.shape[-1]
-    assert n % block == 0
+    _check_blocking(n, block, "quantize_blockwise_log")
     xb = x.reshape(x.shape[:-1] + (n // block, block)).astype(jnp.float32)
     absmax = jnp.max(xb, axis=-1)
     safe = xb / jnp.maximum(absmax[..., None], 1e-38)
@@ -60,6 +75,7 @@ def quantize_blockwise_log(x, block: int):
 
 def dequantize_blockwise_log(codes, scales, block: int):
     n = codes.shape[-1]
+    _check_blocking(n, block, "dequantize_blockwise_log")
     cb = codes.reshape(codes.shape[:-1] + (n // block, block)).astype(jnp.float32)
     val = jnp.exp((cb - 127.0) / 127.0 * RANGE_NATS) * scales[..., None]
     out = jnp.where(cb > 0, val, 0.0)

@@ -76,6 +76,110 @@ def test_cross_planner_restore(tmp_path):
                 np.testing.assert_array_equal(ta[k], tb[k])
 
 
+def test_q8_checkpoint_roundtrip_bitwise(tmp_path):
+    """Quantized store round-trip: master shard, codes, and scales are all
+    bitwise-preserved, and training continues identically (the 8-device
+    twin lives in tests/test_store.py's subprocess driver)."""
+    from repro.core.schedule import CommSchedule
+
+    cfg = get_config("gemma2-2b").reduced()
+    model = build_model(cfg)
+    rt = FSDPRuntime(model, MESH,
+                     schedule=CommSchedule(param_store="q8_block"))
+    opt = make_optimizer(cfg)
+    params = rt.init_params(0)
+    state = opt.init(rt)
+    params, state, _ = _train(rt, cfg, params, state)
+    ckpt.save(tmp_path / "c", rt, params, state, step=3)
+    p2, step, s2 = ckpt.load(tmp_path / "c", rt, opt.init(rt))
+    assert step == 3
+    for name in params:
+        for leaf in ("codes", "master", "scales"):
+            np.testing.assert_array_equal(
+                np.asarray(params[name][leaf]), np.asarray(p2[name][leaf]),
+                err_msg=f"{name}.{leaf} not bitwise across q8 round-trip")
+    a1, _, l1 = _train(rt, cfg, params, state, steps=2, seed=7)
+    a2, _, l2 = _train(rt, cfg, p2, s2, steps=2, seed=7)
+    assert l1 == l2
+
+
+def test_cross_format_restore(tmp_path):
+    """A pre-store (fp32) checkpoint loads into a q8_block runtime (codes
+    derived from the master) and a q8 checkpoint loads back into an fp32
+    runtime (master extracted) -- the storage format is a property of the
+    runtime, not of the checkpoint."""
+    from repro.core.schedule import CommSchedule
+    from repro.quant.blockwise import quantize_blockwise
+
+    cfg = get_config("gemma2-2b").reduced()
+    rt32 = FSDPRuntime(build_model(cfg), MESH)
+    params = rt32.init_params(1)
+    ckpt.save(tmp_path / "a", rt32, params, step=1)
+
+    rtq8 = FSDPRuntime(build_model(cfg), MESH,
+                       schedule=CommSchedule(param_store="q8_block"))
+    pq, _ = ckpt.load(tmp_path / "a", rtq8)
+    for name, lo in rtq8.layouts.items():
+        np.testing.assert_array_equal(np.asarray(params[name]),
+                                      np.asarray(pq[name]["master"]))
+        want_codes, _ = quantize_blockwise(
+            jnp.asarray(pq[name]["master"]), lo.store.block)
+        np.testing.assert_array_equal(np.asarray(want_codes),
+                                      np.asarray(pq[name]["codes"]))
+    ckpt.save(tmp_path / "b", rtq8, pq, step=2)
+    p32, _ = ckpt.load(tmp_path / "b", rt32)
+    for name in params:
+        np.testing.assert_array_equal(np.asarray(params[name]),
+                                      np.asarray(p32[name]))
+
+
+def test_bf16_checkpoint_roundtrip(tmp_path):
+    """bf16 buffers are widened to fp32 on disk (np.savez degrades
+    ml_dtypes bfloat16 to raw void arrays) and narrowed back on load:
+    the round-trip is exact."""
+    from repro.core.schedule import CommSchedule
+
+    cfg = get_config("gemma2-2b").reduced()
+    rt = FSDPRuntime(build_model(cfg), MESH,
+                     schedule=CommSchedule(param_store="bf16"))
+    params = rt.init_params(0)
+    ckpt.save(tmp_path / "c", rt, params, step=1)
+    p2, step = ckpt.load(tmp_path / "c", rt)
+    assert step == 1
+    for name in params:
+        assert np.asarray(p2[name]).dtype == jnp.bfloat16
+        np.testing.assert_array_equal(np.asarray(params[name]),
+                                      np.asarray(p2[name]))
+
+
+def test_q8_quant_block_change_requantizes(tmp_path):
+    """A q8 checkpoint loaded into a runtime with a different quant_block
+    must NOT take the direct leaf path (the scale count would be wrong):
+    it rebuilds from the master and requantizes at the new block size."""
+    import dataclasses as dc
+
+    from repro.core.schedule import CommSchedule
+    from repro.quant.blockwise import quantize_blockwise
+
+    sched = CommSchedule(param_store="q8_block")
+    cfg = get_config("gemma2-2b").reduced()  # quant_block=64
+    rt_a = FSDPRuntime(build_model(cfg), MESH, schedule=sched)
+    params = rt_a.init_params(0)
+    ckpt.save(tmp_path / "c", rt_a, params, step=1)
+
+    cfg_b = dc.replace(cfg, quant_block=32)  # 64-aligned plans stay valid
+    rt_b = FSDPRuntime(build_model(cfg_b), MESH, schedule=sched)
+    p2, _ = ckpt.load(tmp_path / "c", rt_b)
+    for name, lo in rt_b.layouts.items():
+        np.testing.assert_array_equal(np.asarray(params[name]["master"]),
+                                      np.asarray(p2[name]["master"]))
+        assert (p2[name]["scales"].shape[-1]
+                == lo.global_shape()[-1] // 32)
+        want, _ = quantize_blockwise(jnp.asarray(p2[name]["master"]), 32)
+        np.testing.assert_array_equal(np.asarray(want),
+                                      np.asarray(p2[name]["codes"]))
+
+
 def test_data_deterministic_and_learnable():
     cfg = DataConfig(vocab=128, seq_len=32, global_batch=4, seed=3)
     s1, s2 = SyntheticStream(cfg), SyntheticStream(cfg)

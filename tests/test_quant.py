@@ -1,6 +1,7 @@
 """Block-wise quantization properties (linear + log-space variants)."""
 import jax.numpy as jnp
 import numpy as np
+import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.quant.blockwise import (
@@ -65,3 +66,24 @@ def test_log_quant_no_underflow_to_zero():
     assert (log_back[1:] > 0).all()
     rel = np.abs(log_back[1:] - 1e-6) / 1e-6
     assert rel.max() < 0.15
+
+
+def test_shape_checks_raise_value_error():
+    """API-contract checks must be ValueErrors (they survive ``python -O``,
+    where bare asserts vanish), for quantize and dequantize, linear and
+    log-space alike."""
+    x = jnp.zeros(96, jnp.float32)
+    with pytest.raises(ValueError):
+        quantize_blockwise(x, 64)  # 96 % 64 != 0
+    with pytest.raises(ValueError):
+        quantize_blockwise_log(jnp.abs(x), 64)
+    with pytest.raises(ValueError):
+        quantize_blockwise(x, 0)  # block < 1
+    codes, scales = quantize_blockwise(jnp.zeros(128, jnp.float32), 64)
+    with pytest.raises(ValueError):
+        dequantize_blockwise(codes, scales, 48)  # 128 % 48 != 0
+    with pytest.raises(ValueError):
+        # scales count inconsistent with codes/block
+        dequantize_blockwise(codes, scales[:1], 64)
+    with pytest.raises(ValueError):
+        dequantize_blockwise_log(codes, scales, 48)

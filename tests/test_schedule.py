@@ -202,7 +202,7 @@ def test_wire_and_accum_dtype_resolution():
 def test_sharded_gather_identity_without_axes():
     x = jnp.arange(8, dtype=jnp.float32)
     args = ((), (), jnp.dtype(jnp.bfloat16), jnp.dtype(jnp.float32),
-            jnp.dtype(jnp.bfloat16), jnp.dtype(jnp.float32), "xla")
+            jnp.dtype(jnp.bfloat16), jnp.dtype(jnp.float32), "xla", "match")
     y = sharded_gather(x, *args)
     np.testing.assert_array_equal(
         np.asarray(y), np.asarray(x.astype(jnp.bfloat16)))
