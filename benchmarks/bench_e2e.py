@@ -97,6 +97,10 @@ def run_schedules(quick: bool = False, arch: str = "gpt-oss-120b"):
         sched = VARIANTS.get(name) or APPROX_VARIANTS[name]
         rt = FSDPRuntime(build_model(cfg), mesh, schedule=sched,
                          donate=False)
+        # the resolved ShardingPlan: per-group policy, shard size S,
+        # padding, predicted gather wire -- auditable without running a step
+        print(f"-- {name} --")
+        print(rt.plan.describe())
         us, temp = _measure_step(cfg, rt, batch, quick)
         if base is None:
             base = us

@@ -40,6 +40,11 @@ def save(path, runtime, params, opt_state=None, step: int = 0):
         },
     }
     (path / "meta.json").write_text(json.dumps(meta, indent=1))
+    # the resolved ShardingPlan rides along for exact-restore validation:
+    # load_plan(path).dumps() == runtime.plan.dumps() guarantees the
+    # bitwise per-leaf restore path applies to every group
+    (path / "plan.json").write_text(
+        json.dumps(runtime.plan.to_json(), sort_keys=True, indent=1))
     # flat stores save one array per group (the seed's format); dict states
     # (q8_block) save one array per leaf: param__<group>__<leaf>
     arrays = {}
@@ -126,6 +131,21 @@ def load(path, runtime, opt_state_like=None):
     return tuple(out)
 
 
+def load_plan(path):
+    """The ShardingPlan saved with a checkpoint (None for pre-plan
+    checkpoints).  Restoring through ``FSDPRuntime(model, mesh,
+    plan=load_plan(p))`` reconstructs the saved layout exactly, making the
+    bitwise per-leaf restore path apply to every group; comparing against a
+    fresh plan's ``dumps()`` (or ``plan.diff``) shows precisely which
+    groups will take the rebuild-from-master path instead."""
+    from ..core.policy import ShardingPlan
+
+    f = pathlib.Path(path) / "plan.json"
+    if not f.exists():
+        return None
+    return ShardingPlan.from_json(json.loads(f.read_text()))
+
+
 def _saved_master(data, name: str, saved_store: str) -> np.ndarray:
     """fp32 master weights of one group from a saved state of any format."""
     if saved_store == "q8_block":
@@ -137,7 +157,10 @@ def _repack(buf: np.ndarray, saved: dict, lo) -> np.ndarray:
     """Cross-plan restore: unpack tensors via the saved index, re-pack with
     the current plan.  Only same outer_size is supported (TP regrouping
     would need the StridedRagged reshuffle)."""
-    assert saved["outer_size"] == lo.outer_size, "TP resize not supported"
+    if saved["outer_size"] != lo.outer_size:
+        raise ValueError(
+            f"cross-TP restore not supported: checkpoint outer_size "
+            f"{saved['outer_size']} != runtime {lo.outer_size}")
     idx = saved["index"]
     old_total = saved["shard_size"] * saved["num_shards"]
     layers = buf.reshape((-1, lo.outer_size * old_total))

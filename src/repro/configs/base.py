@@ -20,6 +20,15 @@ class ParallelConfig:
     large dense models add TP over ``model``; MoE models add EP over
     ``model``.  ``pod`` defaults to HSDP replication (paper §6.1 sweeps
     2x/4x replication); set ``pod_fsdp=True`` to extend ZeRO-3 across pods.
+
+    The flat schedule knobs below are the *legacy* surface: at runtime init
+    they are lowered (bitwise-neutrally) onto a typed
+    ``core.policy.PolicySet`` -- a default ``ShardingPolicy`` plus one
+    exact-name rule per ``group_schedules`` entry -- and resolved into the
+    ``ShardingPlan`` the runtime consumes.  New code should prefer
+    ``core.policy.plan(model, mesh, policies)`` with explicit policies
+    (or ``policies="auto"`` for the cost-model planner); see DESIGN.md
+    §Policy API for the lowering table.
     """
 
     fsdp_axes: tuple[str, ...] = ("data", "model")  # param-shard axes
@@ -71,8 +80,15 @@ class ParallelConfig:
         # TP shards activations over "model", so parameters can't also be
         # ZeRO-sharded over it.  EP is fine: the runtime strips "model" from
         # the expert groups' FSDP axes (experts are Shard(0) over "model").
-        if self.tp > 1:
-            assert "model" not in self.fsdp_axes
+        # ValueError (not assert): config validation must survive python -O.
+        if self.tp > 1 and "model" in self.fsdp_axes:
+            raise ValueError(
+                f"tp={self.tp} shards activations over 'model'; fsdp_axes "
+                f"{self.fsdp_axes} must not ZeRO-shard parameters over it "
+                f"too")
+        if self.microbatches < 1:
+            raise ValueError(
+                f"microbatches must be >= 1, got {self.microbatches}")
 
 
 @dataclasses.dataclass(frozen=True)

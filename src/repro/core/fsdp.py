@@ -1,6 +1,13 @@
 """veScale-FSDP runtime: fully_shard-style API over RaggedShard + DBuffer.
 
-``FSDPRuntime`` wraps a model (repro.models.*) for a mesh:
+``FSDPRuntime`` wraps a model (repro.models.*) for a mesh.  Its layout is
+a consumed artifact, not a derivation: construction resolves (or is
+handed) a ``core.policy.ShardingPlan`` -- per-group ``ShardingPolicy`` +
+planner placements -- and builds group layouts from it.  The legacy
+``ParallelConfig`` knobs and the ``schedule=``/``group_schedules=``
+kwargs lower onto a ``PolicySet`` bitwise-neutrally; ``policies="auto"``
+runs the cost-model planner; ``plan=`` replays an explicit (e.g.
+checkpoint-restored) plan exactly.  Then:
 
   * each communication group's tensors are localized (outer TP/EP sharding
     composed per paper §4), planned (Algorithm 1), and backed by a DBuffer
@@ -38,9 +45,9 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from ..compat import optimization_barrier, shard_map
 from ..models.transformer import GroupDef
 from .dbuffer import DBuffer
-from .planner import PLANNERS, plan_group
-from .ragged import LANE, ShardDim, TensorSpec, compose_granularity
-from .schedule import CommSchedule, resolve_group_schedules
+from .policy import PolicySet, ShardingPlan, make_plan
+from .ragged import TensorSpec
+from .schedule import CommSchedule
 from .store import ParamStore
 
 
@@ -88,43 +95,76 @@ class FSDPRuntime:
     def __init__(self, model, mesh: Mesh, *, planner: str = "ragged",
                  compute_dtype=jnp.bfloat16, donate: bool = True,
                  scan_unroll: int = 1, schedule: CommSchedule | None = None,
-                 group_schedules: Mapping[str, Any] | None = None):
+                 group_schedules: Mapping[str, Any] | None = None,
+                 policies=None, plan: ShardingPlan | None = None):
         self.model = model
         self.cfg = model.cfg
         self.mesh = mesh
-        self.planner_mode = planner
         self.compute_dtype = compute_dtype
         self.donate = donate
         self.scan_unroll = scan_unroll  # cost-calibration dry runs unroll
-        self.schedule = (schedule if schedule is not None
-                         else CommSchedule.from_config(self.cfg))
         par = self.cfg.parallel
-        # per-group overrides (gather mode/dtypes, sharded=False) on top of
-        # the base schedule; dtype paths validated against the real compute
-        # dtype here so bad combinations fail before the first trace
-        self.group_schedules = resolve_group_schedules(
-            self.schedule,
-            par.group_schedules if group_schedules is None
-            else group_schedules)
-        cdt = jnp.dtype(self.compute_dtype)
-        self.schedule.validate_for(cdt)
-        for s in self.group_schedules.values():
-            s.validate_for(cdt)
         axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        cdt = jnp.dtype(self.compute_dtype)
+
+        # resolve the ShardingPlan the runtime consumes: an explicit plan,
+        # a policies spec (PolicySet / ShardingPolicy / "auto" / ...), or
+        # the legacy ParallelConfig knobs + schedule/group_schedules kwargs
+        # lowered onto a PolicySet (bitwise-neutral -- the parity suites pin
+        # the lowering down)
+        if plan is not None:
+            if (policies is not None or schedule is not None
+                    or group_schedules is not None):
+                raise ValueError(
+                    "pass either plan= or policies=/schedule="
+                    "/group_schedules=, not both")
+            got = {a: int(s) for a, s in plan.axis_sizes.items()}
+            if got != axis_sizes:
+                raise ValueError(
+                    f"plan was resolved for mesh axes {got}, runtime mesh "
+                    f"has {axis_sizes}; re-plan for this mesh")
+            if plan.compute_dtype != cdt.name:
+                raise ValueError(
+                    f"plan was resolved for compute dtype "
+                    f"{plan.compute_dtype}, runtime uses {cdt.name}")
+        else:
+            if policies is None:
+                policies = PolicySet.from_parallel_config(
+                    par, schedule=schedule, group_schedules=group_schedules)
+            elif schedule is not None or group_schedules is not None:
+                raise ValueError(
+                    "pass either policies= or schedule=/group_schedules=, "
+                    "not both")
+            plan = make_plan(model, mesh, policies, planner=planner,
+                             compute_dtype=cdt)
+        self.plan = plan
+        self.planner_mode = plan.planner
+        self.schedule = plan.base_schedule()
+        self._group_scheds = plan.schedules()
+        self.schedule.validate_for(cdt)
+        for s in self._group_scheds.values():
+            s.validate_for(cdt)
+
         self.has_pod = "pod" in axis_sizes
         self.tp = par.tp
         self.ep = par.ep
         self.tp_axis = "model" if par.tp > 1 else None
         self.ep_axis = "model" if par.ep > 1 else None
 
-        self.layouts: dict[str, GroupLayout] = {}
-        for name, gdef in model.groups().items():
-            self.layouts[name] = self._layout(name, gdef, axis_sizes)
-        unknown = set(self.group_schedules) - set(self.layouts)
-        if unknown:
+        gdefs = model.groups()
+        if set(gdefs) != set(plan.groups):
             raise ValueError(
-                f"group_schedules for unknown groups {sorted(unknown)}; "
-                f"this model's groups: {sorted(self.layouts)}")
+                f"plan groups {sorted(plan.groups)} do not match this "
+                f"model's groups {sorted(gdefs)}")
+        self.layouts: dict[str, GroupLayout] = {
+            name: GroupLayout(
+                name=name, gdef=gdefs[name], local_specs=e.local_specs,
+                plan=e.plan, buffer=DBuffer(e.plan), fsdp_axes=e.fsdp_axes,
+                fsdp_axis_sizes=e.fsdp_axis_sizes, outer_axis=e.outer_axis,
+                outer_size=e.outer_size, n_layers=e.n_layers,
+                grad_sync_axes=e.grad_sync_axes, store=e.store)
+            for name, e in plan.groups.items()
+        }
 
         self.batch_axes = tuple(
             a for a in (("pod",) if self.has_pod else ()) + par.batch_axes
@@ -137,60 +177,7 @@ class FSDPRuntime:
     # ------------------------------------------------------------------ #
     def sched_for(self, name: str) -> CommSchedule:
         """The (possibly group-overridden) schedule for one comm group."""
-        return self.group_schedules.get(name, self.schedule)
-
-    def _layout(self, name: str, gdef: GroupDef, axis_sizes) -> GroupLayout:
-        par = self.cfg.parallel
-        outer_axis, outer_size = None, 1
-        local_specs = []
-        for s in gdef.specs:
-            sd = gdef.outer.get(s.name)
-            if sd is not None:
-                outer_axis = sd.axis
-                outer_size = axis_sizes[sd.axis]
-                local_specs.append(compose_granularity(s, sd, outer_size))
-            else:
-                local_specs.append(s)
-        if outer_axis or gdef.replicated_over_model:
-            fsdp_axes = tuple(a for a in par.fsdp_axes if a != "model")
-        else:
-            fsdp_axes = tuple(a for a in par.fsdp_axes if a in axis_sizes)
-        if self.has_pod and par.pod_fsdp:
-            fsdp_axes = ("pod",) + fsdp_axes
-        grad_sync_axes: tuple[str, ...] = ()
-        if not self.sched_for(name).sharded:
-            # group kept replicated by its schedule override: no gather,
-            # grads psum'd over the axes it would have been sharded on
-            grad_sync_axes, fsdp_axes = fsdp_axes, ()
-        m = int(np.prod([axis_sizes[a] for a in fsdp_axes])) or 1
-
-        store = ParamStore(self.sched_for(name).param_store,
-                           self.cfg.quant_block)
-        # quant blocks must never straddle a shard boundary or a tensor
-        # start -- for the 8-bit optimizer states AND for any group whose
-        # *store* is quantized (the paper's block-wise quantized training)
-        align = max(
-            store.align(),
-            self.cfg.quant_block if self.cfg.optimizer == "adam8bit" else 1,
-        )
-        if self.planner_mode == "ragged":
-            plan = plan_group(local_specs, m, g_coll=LANE, align=align)
-        else:
-            plan = PLANNERS[self.planner_mode](local_specs, m)
-        if store.quantized and plan.shard_size % store.block:
-            raise ValueError(
-                f"group {name}: planner mode {self.planner_mode!r} produced "
-                f"shard size {plan.shard_size} not aligned to quant block "
-                f"{store.block}; q8_block needs the ragged planner's align "
-                f"guarantee")
-        return GroupLayout(
-            name=name, gdef=gdef, local_specs=tuple(local_specs), plan=plan,
-            buffer=DBuffer(plan), fsdp_axes=fsdp_axes,
-            fsdp_axis_sizes=tuple(axis_sizes[a] for a in fsdp_axes),
-            outer_axis=outer_axis, outer_size=outer_size,
-            n_layers=gdef.n_layers, grad_sync_axes=grad_sync_axes,
-            store=store,
-        )
+        return self._group_scheds.get(name, self.schedule)
 
     # ------------------------------------------------------------------ #
     # state construction
@@ -435,17 +422,10 @@ class FSDPRuntime:
         scales vs 4 bytes/element).  Schedule-unsharded and single-group
         replicated buffers move nothing; backward re-gathers (remat) and
         the (m-1)/m ring discount apply uniformly across formats, so they
-        are deliberately left out of the ratio."""
-        cd = jnp.dtype(self.compute_dtype)
-        total = 0
-        for name, lo in self.layouts.items():
-            if not lo.fsdp_axes:
-                continue
-            sched = self.sched_for(name)
-            per_layer = lo.store.wire_bytes(lo.plan.total,
-                                            sched.wire_dtype(cd))
-            total += per_layer * (lo.n_layers or 1)
-        return total
+        are deliberately left out of the ratio.  Delegates to the resolved
+        ``ShardingPlan`` (same accounting, now a plan-level prediction
+        available before a runtime exists)."""
+        return self.plan.gather_wire_bytes()
 
     # ------------------------------------------------------------------ #
     # serving steps (ZeRO-3 inference: per-layer gather, sharded at rest)
@@ -656,6 +636,14 @@ class _ParamGetter:
                     jax.tree.map(lambda t: t[0], b) for b in bufs2))
                 g1 = gather_layer(tuple(
                     jax.tree.map(lambda t: t[1], b) for b in bufs2))
+                # pin the two-slot issue order explicitly: both slots'
+                # gathered buffers materialize together before either
+                # layer's compute.  Because remat replays this barrier, the
+                # *backward* re-gathers are issued as a pair too -- the
+                # issue order is in the jaxpr (regression-tested), not left
+                # to XLA's scheduler.  The barrier is the identity, so
+                # bitwise parity with the sequential schedule holds.
+                g0, g1 = optimization_barrier((g0, g1))
                 c, y0 = inner(g0, c, jax.tree.map(lambda t: t[0], xs2))
                 # materialize the carry at the layer seam exactly as a
                 # per-layer scan-iteration boundary would (bitwise parity

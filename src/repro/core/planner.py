@@ -351,3 +351,14 @@ PLANNERS = {
     "megatron": plan_megatron,
     "naive": plan_naive,
 }
+
+
+def get_planner(mode: str):
+    """Planner lookup with a config-grade error (a typo'd ``--planner``
+    raises ValueError listing the choices instead of a bare KeyError)."""
+    try:
+        return PLANNERS[mode]
+    except KeyError:
+        raise ValueError(
+            f"unknown planner mode {mode!r}; expected one of "
+            f"{sorted(PLANNERS)}") from None

@@ -1,0 +1,727 @@
+"""ShardingPolicy / ShardingPlan: the typed, composable planning front-end.
+
+The runtime's knobs grew bottom-up: ``ParallelConfig`` accumulated 10+
+orthogonal schedule fields plus a stringly-typed ``group_schedules``
+dict-of-dicts that could not express "quantize every MoE expert group"
+without enumerating group names.  This module is the top-down redesign the
+paper's flexibility claim actually calls for (SimpleFSDP's minimal
+composable front-end; OSDP's cost-model-chosen per-group strategies):
+
+  * ``ShardingPolicy``  -- one group's complete sharding/communication
+                           policy as a typed, validated dataclass: storage
+                           format, gather/reduce mode + wire dtypes, scan
+                           structure (prefetch/reshard/keep-last), and
+                           whether the group is FSDP-sharded at all.  It is
+                           a 1:1 view over ``CommSchedule`` (``to_schedule``
+                           / ``from_schedule``), so everything the parity
+                           suites guarantee about schedules transfers.
+  * ``PolicyRule``      -- a selector + policy.  Selectors match groups by
+                           name glob (``match="layers*"``), by structural
+                           tag (``tag="experts"``: every MoE expert group,
+                           whatever its name), or by predicate over the
+                           group's ``GroupInfo`` (name, tag, n_layers, the
+                           full ``TensorSpec`` list).  Criteria AND
+                           together; rules compose first-match-wins in a
+                           ``PolicySet``.  A rule that matches no group of
+                           the model raises at planning time -- the typo'd
+                           group name is an error, not a silent no-op.
+  * ``ShardingPlan``    -- the resolved artifact: per-group policy + the
+                           structure-aware planner's ``GroupPlan``
+                           placements + predicted wire/memory costs.  It is
+                           inspectable (``describe()`` renders the audit
+                           table), JSON-serializable (``to_json`` /
+                           ``from_json`` / ``dumps``; saved alongside
+                           checkpoints for exact-restore validation), and
+                           diffable (``diff``).  ``FSDPRuntime`` consumes a
+                           ShardingPlan instead of re-deriving layout from
+                           config -- a plan restored from JSON reconstructs
+                           the exact layout, bit for bit.
+  * ``plan(model, mesh, policies)`` -- the single entry point.
+                           ``policies`` may be a ``PolicySet``, a uniform
+                           ``ShardingPolicy``/``CommSchedule``, ``None``
+                           (lower the legacy ``ParallelConfig`` knobs), or
+                           ``"auto"`` -- run the structure-aware cost model
+                           (``CostModel``, roofline link/HBM timings) over
+                           every group to pick store format and comm policy:
+                           q8_block wire for bandwidth-bound layer stacks,
+                           replication for tiny unstacked groups whose
+                           per-step gather latency outweighs the memory
+                           saved.
+
+Scan-structure knobs (``prefetch`` / ``reshard_after_forward`` /
+``keep_last_gathered``) are whole-model: one layer scan gathers several
+groups, so they come from the PolicySet's *default* policy, and a rule
+whose policy disagrees on them is rejected at construction.
+
+Legacy lowering: ``PolicySet.from_parallel_config`` maps the flat
+``ParallelConfig`` knobs onto a default policy plus one exact-name rule per
+``group_schedules`` entry.  The lowering is bitwise-neutral -- it produces
+the same per-group ``CommSchedule`` objects the runtime used to build
+directly, which the schedule/store parity suites pin down.
+"""
+from __future__ import annotations
+
+import dataclasses
+import fnmatch
+import json
+from typing import Any, Callable, Mapping, Optional, Sequence
+
+import numpy as np
+
+from .planner import get_planner, plan_group
+from .ragged import LANE, GroupPlan, Placement, TensorSpec, compose_granularity
+from .schedule import CommSchedule, resolve_group_schedules
+from .store import ParamStore
+
+# structural tags a PolicyRule can select on (see group_tag)
+TAGS = ("layers", "experts", "globals")
+
+# scan-structure knobs: one layer scan gathers several groups per step, so
+# these must agree across groups and always come from the PolicySet default
+STRUCTURE_FIELDS = ("prefetch", "reshard_after_forward", "keep_last_gathered")
+
+
+# --------------------------------------------------------------------------- #
+# policy
+# --------------------------------------------------------------------------- #
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPolicy:
+    """One communication group's complete sharding policy.
+
+    A typed 1:1 view over ``CommSchedule`` (``store`` maps to
+    ``param_store``); validation is delegated to ``CommSchedule`` so the two
+    can never drift.
+    """
+
+    store: str = "fp32"            # fp32 | bf16 | q8_block (ParamStore)
+    gather_mode: str = "xla"       # xla | ring
+    reduce_mode: str = "match"     # match | ring_acc
+    gather_dtype: Optional[str] = None   # all-gather wire dtype (None=compute)
+    reduce_dtype: Optional[str] = None   # grad reduce dtype (None=wire)
+    prefetch: bool = False               # two-slot double-buffered gathers
+    reshard_after_forward: bool = True   # ZeRO-3 backward re-gather
+    keep_last_gathered: bool = False     # last layer stays gathered
+    sharded: bool = True                 # False: replicate, psum grads
+
+    def __post_init__(self):
+        self.to_schedule()  # knob validation lives in CommSchedule
+
+    def to_schedule(self) -> CommSchedule:
+        return CommSchedule(
+            prefetch=self.prefetch,
+            reshard_after_forward=self.reshard_after_forward,
+            keep_last_gathered=self.keep_last_gathered,
+            gather_dtype=self.gather_dtype,
+            reduce_dtype=self.reduce_dtype,
+            gather_mode=self.gather_mode,
+            reduce_mode=self.reduce_mode,
+            param_store=self.store,
+            sharded=self.sharded,
+        )
+
+    @classmethod
+    def from_schedule(cls, sched: CommSchedule) -> "ShardingPolicy":
+        return cls(
+            store=sched.param_store,
+            gather_mode=sched.gather_mode,
+            reduce_mode=sched.reduce_mode,
+            gather_dtype=sched.gather_dtype,
+            reduce_dtype=sched.reduce_dtype,
+            prefetch=sched.prefetch,
+            reshard_after_forward=sched.reshard_after_forward,
+            keep_last_gathered=sched.keep_last_gathered,
+            sharded=sched.sharded,
+        )
+
+    def describe(self) -> str:
+        return (f"{self.store} {self.gather_mode}/{self.reduce_mode} "
+                f"g={self.gather_dtype or 'compute'} "
+                f"r={self.reduce_dtype or 'wire'}"
+                f"{'' if self.sharded else ' replicated'}")
+
+
+# --------------------------------------------------------------------------- #
+# selectors
+# --------------------------------------------------------------------------- #
+
+@dataclasses.dataclass(frozen=True)
+class GroupInfo:
+    """What a PolicyRule selector sees of one communication group."""
+
+    name: str
+    tag: str                       # layers | experts | globals
+    n_layers: Optional[int]
+    specs: tuple[TensorSpec, ...]  # the group's FULL logical tensor specs
+
+    @property
+    def payload(self) -> int:
+        """Logical elements across the whole layer stack."""
+        return sum(s.size for s in self.specs) * (self.n_layers or 1)
+
+
+def group_tag(name: str, gdef) -> str:
+    """Structural tag of a communication group: ``experts`` for MoE expert
+    groups (whatever the model called them), ``layers`` for any other
+    stacked group, ``globals`` for unstacked groups."""
+    if "expert" in name:
+        return "experts"
+    return "layers" if gdef.n_layers else "globals"
+
+
+@dataclasses.dataclass(frozen=True)
+class PolicyRule:
+    """Selector + policy.  Criteria AND together; at least one required."""
+
+    policy: ShardingPolicy
+    match: Optional[str] = None                       # fnmatch name glob
+    tag: Optional[str] = None                         # layers|experts|globals
+    where: Optional[Callable[[GroupInfo], bool]] = None
+
+    def __post_init__(self):
+        if self.match is None and self.tag is None and self.where is None:
+            raise ValueError(
+                "PolicyRule needs at least one selector (match=, tag=, or "
+                "where=); to change the default policy, set PolicySet.default")
+        if self.tag is not None and self.tag not in TAGS:
+            raise ValueError(
+                f"unknown PolicyRule tag {self.tag!r}; expected one of "
+                f"{list(TAGS)}")
+
+    def matches(self, info: GroupInfo) -> bool:
+        if self.match is not None and not fnmatch.fnmatchcase(
+                info.name, self.match):
+            return False
+        if self.tag is not None and info.tag != self.tag:
+            return False
+        if self.where is not None and not self.where(info):
+            return False
+        return True
+
+    def selector(self) -> str:
+        parts = []
+        if self.match is not None:
+            parts.append(f"match={self.match!r}")
+        if self.tag is not None:
+            parts.append(f"tag={self.tag!r}")
+        if self.where is not None:
+            parts.append(f"where={getattr(self.where, '__name__', 'fn')}")
+        return " ".join(parts)
+
+
+@dataclasses.dataclass(frozen=True)
+class PolicySet:
+    """First-match-wins rules over a default policy."""
+
+    rules: tuple[PolicyRule, ...] = ()
+    default: ShardingPolicy = ShardingPolicy()
+
+    def __post_init__(self):
+        object.__setattr__(self, "rules", tuple(self.rules))
+        for r in self.rules:
+            bad = [f for f in STRUCTURE_FIELDS
+                   if getattr(r.policy, f) != getattr(self.default, f)]
+            if bad:
+                raise ValueError(
+                    f"PolicyRule ({r.selector()}) changes scan-structure "
+                    f"knobs {bad}: one layer scan gathers several groups, so "
+                    f"{list(STRUCTURE_FIELDS)} come from PolicySet.default")
+
+    def policy_for(self, info: GroupInfo) -> tuple[ShardingPolicy,
+                                                   Optional[int]]:
+        """(policy, index of the matching rule or None for the default)."""
+        for i, r in enumerate(self.rules):
+            if r.matches(info):
+                return r.policy, i
+        return self.default, None
+
+    @classmethod
+    def from_parallel_config(cls, par, schedule: CommSchedule | None = None,
+                             group_schedules=None) -> "PolicySet":
+        """Lower the legacy ``ParallelConfig`` knob surface (or explicit
+        ``schedule=``/``group_schedules=`` overrides of it) onto a
+        PolicySet: a default policy plus one exact-name rule per
+        ``group_schedules`` entry.  Bitwise-neutral: the resolved per-group
+        ``CommSchedule``s are exactly what the runtime used to build."""
+        import glob as _glob
+
+        base = schedule if schedule is not None else CommSchedule.from_parallel(par)
+        overrides = (par.group_schedules if group_schedules is None
+                     else group_schedules)
+        scheds = resolve_group_schedules(base, overrides)
+        # glob-escape the keys: legacy group_schedules names are EXACT
+        # group names, so metacharacters in a key must not quietly become
+        # a pattern (an unknown name keeps raising at plan time)
+        rules = tuple(
+            PolicyRule(match=_glob.escape(name),
+                       policy=ShardingPolicy.from_schedule(s))
+            for name, s in scheds.items())
+        return cls(rules=rules, default=ShardingPolicy.from_schedule(base))
+
+
+# --------------------------------------------------------------------------- #
+# the resolved plan artifact
+# --------------------------------------------------------------------------- #
+
+@dataclasses.dataclass(frozen=True)
+class GroupPlanEntry:
+    """One group's resolved slice of a ShardingPlan: the policy that won,
+    the planner's placements, and the mesh-axis decomposition."""
+
+    name: str
+    tag: str
+    policy: ShardingPolicy
+    local_specs: tuple[TensorSpec, ...]
+    plan: GroupPlan
+    fsdp_axes: tuple[str, ...]
+    fsdp_axis_sizes: tuple[int, ...]
+    outer_axis: Optional[str]
+    outer_size: int
+    n_layers: Optional[int]
+    grad_sync_axes: tuple[str, ...]
+    quant_block: int
+
+    @property
+    def store(self) -> ParamStore:
+        return ParamStore(self.policy.store, self.quant_block)
+
+    def schedule(self) -> CommSchedule:
+        return self.policy.to_schedule()
+
+    def gather_wire_bytes(self, compute_dtype) -> int:
+        """Bytes one forward pass's all-gathers of this group put on the
+        wire, per gathered copy (same accounting as
+        ``FSDPRuntime.gather_wire_bytes``: unsharded groups move nothing;
+        remat re-gathers and the ring discount apply uniformly)."""
+        import jax.numpy as jnp
+
+        if not self.fsdp_axes:
+            return 0
+        cd = jnp.dtype(compute_dtype)
+        per_layer = self.store.wire_bytes(self.plan.total,
+                                          self.schedule().wire_dtype(cd))
+        return per_layer * (self.n_layers or 1)
+
+    def param_bytes(self) -> int:
+        """Stored bytes per device for this group's param state (master +
+        any quantized payload), across the layer stack."""
+        s = self.store
+        per_elem = (
+            s.storage_dtype.itemsize if not s.quantized
+            else 1 + 4 + 4.0 / s.block)  # codes + fp32 master + scales
+        local = self.plan.shard_size if self.fsdp_axes else self.plan.total
+        return int(local * per_elem * (self.n_layers or 1))
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPlan:
+    """The resolved, first-class planning artifact.
+
+    Inspect with ``describe()``, serialize with ``to_json``/``dumps``,
+    compare with ``diff``.  A plan round-tripped through JSON reconstructs
+    the exact layout (placements carry name/shape/dtype/granularity/offset),
+    so ``FSDPRuntime`` can be built from a restored plan bit-for-bit --
+    checkpoints save ``plan.json`` next to the weights for exactly that.
+    """
+
+    base: ShardingPolicy
+    groups: Mapping[str, GroupPlanEntry]
+    axis_sizes: Mapping[str, int]
+    planner: str
+    compute_dtype: str  # dtype name, e.g. "bfloat16"
+
+    def base_schedule(self) -> CommSchedule:
+        return self.base.to_schedule()
+
+    def schedules(self) -> dict[str, CommSchedule]:
+        return {n: e.schedule() for n, e in self.groups.items()}
+
+    def policy_set(self) -> PolicySet:
+        """The plan's policies as an explicit exact-name PolicySet -- e.g.
+        to re-plan a size-reduced variant of the same model under identical
+        per-group decisions (the dry-run calibrator does this for
+        ``--policies auto``)."""
+        return PolicySet(
+            rules=tuple(PolicyRule(match=n, policy=e.policy)
+                        for n, e in self.groups.items()
+                        if e.policy != self.base),
+            default=self.base)
+
+    # ---- accounting ------------------------------------------------------ #
+    def gather_wire_bytes(self) -> int:
+        return sum(e.gather_wire_bytes(self.compute_dtype)
+                   for e in self.groups.values())
+
+    # ---- inspection ------------------------------------------------------ #
+    def describe(self) -> str:
+        """The audit table: per-group policy, shard size S, padding, and
+        predicted gather wire -- what ``dryrun --plan-only`` and
+        ``bench_e2e --schedule`` print."""
+        mesh = ",".join(f"{a}={s}" for a, s in self.axis_sizes.items())
+        head = (f"ShardingPlan mesh[{mesh}] planner={self.planner} "
+                f"compute={self.compute_dtype} "
+                f"scan[prefetch={int(self.base.prefetch)} "
+                f"reshard={int(self.base.reshard_after_forward)} "
+                f"keep_last={int(self.base.keep_last_gathered)}]")
+        cols = ["group", "tag", "L", "m", "S", "pad%", "policy",
+                "gather_wire_mb"]
+        rows = []
+        for name, e in self.groups.items():
+            m = int(np.prod(e.fsdp_axis_sizes)) if e.fsdp_axes else 1
+            rows.append([
+                name, e.tag, str(e.n_layers or "-"), str(m),
+                str(e.plan.shard_size),
+                f"{100 * e.plan.padding_ratio:.2f}",
+                e.policy.describe(),
+                f"{e.gather_wire_bytes(self.compute_dtype) / 1e6:.3f}",
+            ])
+        widths = [max(len(c), *(len(r[i]) for r in rows)) if rows else len(c)
+                  for i, c in enumerate(cols)]
+        lines = [head,
+                 "  ".join(c.ljust(w) for c, w in zip(cols, widths))]
+        lines += ["  ".join(v.ljust(w) for v, w in zip(r, widths))
+                  for r in rows]
+        return "\n".join(lines)
+
+    # ---- serialization --------------------------------------------------- #
+    def to_json(self) -> dict:
+        return {
+            "version": 1,
+            "axis_sizes": {a: int(s) for a, s in self.axis_sizes.items()},
+            "planner": self.planner,
+            "compute_dtype": self.compute_dtype,
+            "base": dataclasses.asdict(self.base),
+            "groups": {
+                name: {
+                    "tag": e.tag,
+                    "policy": dataclasses.asdict(e.policy),
+                    "shard_size": e.plan.shard_size,
+                    "num_shards": e.plan.num_shards,
+                    "mode": e.plan.mode,
+                    "padding": e.plan.padding,
+                    "n_layers": e.n_layers,
+                    "outer_axis": e.outer_axis,
+                    "outer_size": e.outer_size,
+                    "fsdp_axes": list(e.fsdp_axes),
+                    "fsdp_axis_sizes": [int(s) for s in e.fsdp_axis_sizes],
+                    "grad_sync_axes": list(e.grad_sync_axes),
+                    "quant_block": e.quant_block,
+                    "gather_wire_mb": round(
+                        e.gather_wire_bytes(self.compute_dtype) / 1e6, 6),
+                    "param_mb": round(e.param_bytes() / 1e6, 6),
+                    "placements": [
+                        {"name": p.spec.name, "shape": list(p.spec.shape),
+                         "dtype": p.spec.dtype,
+                         "granularity": p.spec.granularity,
+                         "offset": p.offset}
+                        for p in e.plan.placements],
+                }
+                for name, e in self.groups.items()
+            },
+        }
+
+    def dumps(self) -> str:
+        """Canonical JSON string (sorted keys) -- plan equality is string
+        equality of ``dumps()``."""
+        return json.dumps(self.to_json(), sort_keys=True)
+
+    @classmethod
+    def from_json(cls, data: Mapping[str, Any]) -> "ShardingPlan":
+        groups = {}
+        for name, g in data["groups"].items():
+            placements = tuple(
+                Placement(TensorSpec(p["name"], tuple(p["shape"]),
+                                     p.get("dtype", "float32"),
+                                     p["granularity"]),
+                          p["offset"])
+                for p in g["placements"])
+            gplan = GroupPlan(placements, shard_size=g["shard_size"],
+                              num_shards=g["num_shards"], mode=g["mode"])
+            groups[name] = GroupPlanEntry(
+                name=name, tag=g["tag"],
+                policy=ShardingPolicy(**g["policy"]),
+                local_specs=tuple(p.spec for p in placements),
+                plan=gplan,
+                fsdp_axes=tuple(g["fsdp_axes"]),
+                fsdp_axis_sizes=tuple(g["fsdp_axis_sizes"]),
+                outer_axis=g["outer_axis"], outer_size=g["outer_size"],
+                n_layers=g["n_layers"],
+                grad_sync_axes=tuple(g["grad_sync_axes"]),
+                quant_block=g["quant_block"])
+        return cls(base=ShardingPolicy(**data["base"]), groups=groups,
+                   axis_sizes=dict(data["axis_sizes"]),
+                   planner=data["planner"],
+                   compute_dtype=data["compute_dtype"])
+
+    def diff(self, other: "ShardingPlan") -> list[str]:
+        """Human-readable field-level differences vs ``other`` (empty ==
+        plans are identical)."""
+        out: list[str] = []
+
+        def walk(path, a, b):
+            if isinstance(a, dict) and isinstance(b, dict):
+                for k in sorted(set(a) | set(b)):
+                    if k not in a:
+                        out.append(f"{path}{k}: <absent> != {b[k]!r}")
+                    elif k not in b:
+                        out.append(f"{path}{k}: {a[k]!r} != <absent>")
+                    else:
+                        walk(f"{path}{k}.", a[k], b[k])
+            elif a != b:
+                out.append(f"{path[:-1]}: {a!r} != {b!r}")
+
+        walk("", self.to_json(), other.to_json())
+        return out
+
+
+# --------------------------------------------------------------------------- #
+# the auto planner's cost model
+# --------------------------------------------------------------------------- #
+
+@dataclasses.dataclass(frozen=True)
+class CostModel:
+    """Roofline terms the auto-planner scores candidate policies with.
+
+    Per group and candidate store format, the predicted per-step comm time
+    is ``gathers_per_step * wire_bytes * (m-1)/m / ici_bw`` plus, for a
+    quantized store, the local dequant HBM traffic (read 1 B/elem codes +
+    scales, write the compute-dtype buffer) and a fixed per-collective
+    issue latency.  The format with the smallest predicted time wins, ties
+    broken toward the earlier (more exact) format -- so an m=1 mesh keeps
+    fp32 everywhere and a bandwidth-bound layer stack at scale takes the
+    ~4x-cheaper q8_block wire.  Tiny *unstacked* groups (< ``replicate_
+    bytes`` of master weights) are kept replicated: their per-step gather
+    latency outweighs the memory the shard would save.
+    """
+
+    ici_bw: float
+    hbm_bw: float
+    peak_flops: float
+    gather_latency_s: float = 5e-6
+    replicate_bytes: int = 4 << 20
+
+    # store formats in preference order (ties break toward the left)
+    CANDIDATES = ("fp32", "bf16", "q8_block")
+
+    @classmethod
+    def default(cls) -> "CostModel":
+        from ..launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+        return cls(ici_bw=ICI_BW, hbm_bw=HBM_BW, peak_flops=PEAK_FLOPS_BF16)
+
+    def gather_time(self, fmt: str, elems_per_layer: int, n_layers: int,
+                    m: int, quant_block: int, compute_itemsize: int,
+                    reshard: bool = True) -> float:
+        """Predicted per-step parameter-gather seconds for one group under
+        store format ``fmt`` (forward + backward re-gather when
+        resharding)."""
+        gathers = 2.0 if reshard else 1.0
+        store = ParamStore(fmt, quant_block)
+        wire_dtype = np.dtype(np.float32 if compute_itemsize == 4
+                              else np.float16)  # itemsize is all that matters
+        wire = store.wire_bytes(elems_per_layer, wire_dtype)
+        ring = (m - 1) / m if m > 1 else 0.0
+        t = gathers * n_layers * (
+            wire * ring / self.ici_bw + self.gather_latency_s)
+        if store.quantized:
+            # local dequant traffic: codes+scales in, compute-dtype out
+            deq = elems_per_layer * (1 + 4.0 / quant_block + compute_itemsize)
+            t += gathers * n_layers * deq / self.hbm_bw
+        return t
+
+    def choose_store(self, elems_per_layer: int, n_layers: int, m: int,
+                     quant_block: int, compute_itemsize: int,
+                     reshard: bool = True) -> str:
+        best, best_t = None, None
+        for fmt in self.CANDIDATES:
+            t = self.gather_time(fmt, elems_per_layer, n_layers, m,
+                                 quant_block, compute_itemsize, reshard)
+            if best_t is None or t < best_t:
+                best, best_t = fmt, t
+        return best
+
+
+def auto_policies(model, axis_sizes: Mapping[str, int],
+                  compute_dtype=None,
+                  cost_model: CostModel | None = None) -> PolicySet:
+    """The ``policies="auto"`` planner: run the structure-aware cost model
+    over every communication group and emit an explicit exact-name
+    PolicySet (the decisions are then first-class in the ShardingPlan)."""
+    import jax.numpy as jnp
+
+    cm = cost_model or CostModel.default()
+    cfg = model.cfg
+    cd = jnp.dtype(compute_dtype or jnp.bfloat16)
+    groups = model.groups()
+
+    # scan structure: overlap gathers when there is a real stack to overlap
+    max_layers = max((g.n_layers or 0) for g in groups.values())
+    default = ShardingPolicy(
+        prefetch=max_layers >= 3, keep_last_gathered=max_layers >= 3)
+
+    rules = []
+    for name, gdef in groups.items():
+        elems, m, _axes = _group_shape(name, gdef, cfg.parallel, axis_sizes)
+        n_layers = gdef.n_layers or 1
+        master_bytes = elems * n_layers * 4  # fp32 master weights
+        if gdef.n_layers is None and m > 1 and (
+                master_bytes <= cm.replicate_bytes):
+            pol = dataclasses.replace(default, sharded=False)
+        else:
+            fmt = cm.choose_store(elems, n_layers, m, cfg.quant_block,
+                                  cd.itemsize,
+                                  reshard=default.reshard_after_forward)
+            pol = dataclasses.replace(default, store=fmt)
+        if pol != default:
+            rules.append(PolicyRule(match=name, policy=pol))
+    return PolicySet(rules=tuple(rules), default=default)
+
+
+# --------------------------------------------------------------------------- #
+# resolution: policies x model x mesh -> ShardingPlan
+# --------------------------------------------------------------------------- #
+
+def _axis_sizes(mesh) -> dict[str, int]:
+    """Mesh axis sizes from a jax Mesh or a plain {axis: size} mapping --
+    planning is pure host-side metadata, no devices required."""
+    if isinstance(mesh, Mapping):
+        return {a: int(s) for a, s in mesh.items()}
+    return {a: int(s) for a, s in zip(mesh.axis_names, mesh.devices.shape)}
+
+
+def _group_axes(name: str, gdef, par, axis_sizes: Mapping[str, int]):
+    """The (outer_axis, outer_size, local_specs, fsdp_axes) decomposition of
+    one group -- TP/EP outer sharding composed before FSDP, exactly the
+    runtime's historical layout rules."""
+    outer_axis, outer_size = None, 1
+    local_specs = []
+    for s in gdef.specs:
+        sd = gdef.outer.get(s.name)
+        if sd is not None:
+            outer_axis = sd.axis
+            outer_size = axis_sizes[sd.axis]
+            local_specs.append(compose_granularity(s, sd, outer_size))
+        else:
+            local_specs.append(s)
+    if outer_axis or gdef.replicated_over_model:
+        fsdp_axes = tuple(a for a in par.fsdp_axes if a != "model")
+    else:
+        fsdp_axes = tuple(a for a in par.fsdp_axes if a in axis_sizes)
+    if "pod" in axis_sizes and par.pod_fsdp:
+        fsdp_axes = ("pod",) + fsdp_axes
+    return outer_axis, outer_size, tuple(local_specs), fsdp_axes
+
+
+def _group_shape(name: str, gdef, par, axis_sizes: Mapping[str, int]):
+    """(per-layer local payload elements, FSDP world size, fsdp_axes) --
+    the quantities the auto cost model scores."""
+    _, _, local_specs, fsdp_axes = _group_axes(name, gdef, par, axis_sizes)
+    m = int(np.prod([axis_sizes[a] for a in fsdp_axes])) or 1
+    return sum(s.size for s in local_specs), m, fsdp_axes
+
+
+def _resolve_policies(policies, model, axis_sizes, compute_dtype,
+                      cost_model) -> PolicySet:
+    if policies is None:
+        return PolicySet.from_parallel_config(model.cfg.parallel)
+    if isinstance(policies, str):
+        if policies != "auto":
+            raise ValueError(
+                f"unknown policies spec {policies!r}; expected 'auto', a "
+                f"PolicySet, a ShardingPolicy, a CommSchedule, or None")
+        return auto_policies(model, axis_sizes, compute_dtype, cost_model)
+    if isinstance(policies, PolicySet):
+        return policies
+    if isinstance(policies, ShardingPolicy):
+        return PolicySet(default=policies)
+    if isinstance(policies, CommSchedule):
+        return PolicySet(default=ShardingPolicy.from_schedule(policies))
+    raise ValueError(
+        f"unknown policies spec of type {type(policies).__name__}; expected "
+        f"'auto', a PolicySet, a ShardingPolicy, a CommSchedule, or None")
+
+
+def plan(model, mesh, policies=None, *, planner: str = "ragged",
+         compute_dtype=None, cost_model: CostModel | None = None
+         ) -> ShardingPlan:
+    """THE planning entry point: resolve ``policies`` against the model's
+    communication groups on ``mesh`` (a jax Mesh or an {axis: size} mapping)
+    into a ``ShardingPlan``.
+
+    ``policies``: ``PolicySet`` / ``ShardingPolicy`` / ``CommSchedule`` /
+    ``None`` (lower the legacy ``ParallelConfig`` knobs) / ``"auto"`` (the
+    ``CostModel`` picks per-group store format, and replication for tiny
+    unstacked groups).  Rules that match no group raise -- a typo'd group
+    name is an error, never a silent no-op.
+    """
+    import jax.numpy as jnp
+
+    axis_sizes = _axis_sizes(mesh)
+    cfg = model.cfg
+    par = cfg.parallel
+    cd = jnp.dtype(compute_dtype or jnp.bfloat16)
+    pset = _resolve_policies(policies, model, axis_sizes, cd, cost_model)
+    planner_fn = get_planner(planner)
+
+    entries: dict[str, GroupPlanEntry] = {}
+    matched: set[int] = set()
+    for name, gdef in model.groups().items():
+        info = GroupInfo(name=name, tag=group_tag(name, gdef),
+                         n_layers=gdef.n_layers, specs=gdef.specs)
+        pol, _ = pset.policy_for(info)
+        # typo protection is independent of precedence: a rule shadowed by
+        # an earlier one still "matches"; only a selector that names
+        # nothing in this model is an error
+        matched.update(i for i, r in enumerate(pset.rules)
+                       if r.matches(info))
+        sched = pol.to_schedule()
+        sched.validate_for(cd)
+
+        outer_axis, outer_size, local_specs, fsdp_axes = _group_axes(
+            name, gdef, par, axis_sizes)
+        grad_sync_axes: tuple[str, ...] = ()
+        if not sched.sharded:
+            # group kept replicated by policy: no gather, grads psum'd over
+            # the axes it would have been sharded on
+            grad_sync_axes, fsdp_axes = fsdp_axes, ()
+        m = int(np.prod([axis_sizes[a] for a in fsdp_axes])) or 1
+
+        store = ParamStore(sched.param_store, cfg.quant_block)
+        # quant blocks must never straddle a shard boundary or a tensor
+        # start -- for the 8-bit optimizer states AND for any group whose
+        # *store* is quantized (the paper's block-wise quantized training)
+        align = max(
+            store.align(),
+            cfg.quant_block if cfg.optimizer == "adam8bit" else 1,
+        )
+        if planner == "ragged":
+            gplan = plan_group(local_specs, m, g_coll=LANE, align=align)
+        else:
+            gplan = planner_fn(local_specs, m)
+        if store.quantized and gplan.shard_size % store.block:
+            raise ValueError(
+                f"group {name}: planner mode {planner!r} produced shard "
+                f"size {gplan.shard_size} not aligned to quant block "
+                f"{store.block}; q8_block needs the ragged planner's align "
+                f"guarantee")
+        entries[name] = GroupPlanEntry(
+            name=name, tag=info.tag, policy=pol, local_specs=local_specs,
+            plan=gplan, fsdp_axes=fsdp_axes,
+            fsdp_axis_sizes=tuple(axis_sizes[a] for a in fsdp_axes),
+            outer_axis=outer_axis, outer_size=outer_size,
+            n_layers=gdef.n_layers, grad_sync_axes=grad_sync_axes,
+            quant_block=cfg.quant_block)
+
+    unmatched = [r.selector() for i, r in enumerate(pset.rules)
+                 if i not in matched]
+    if unmatched:
+        raise ValueError(
+            f"policy rules matched no communication group: {unmatched}; "
+            f"this model's groups: {sorted(entries)}")
+    return ShardingPlan(base=pset.default, groups=entries,
+                        axis_sizes=axis_sizes, planner=planner,
+                        compute_dtype=cd.name)
+
+
+# alias for call sites where ``plan`` the name is taken by a local
+make_plan = plan

@@ -229,7 +229,10 @@ class CommSchedule:
 
     @classmethod
     def from_config(cls, cfg) -> "CommSchedule":
-        par = cfg.parallel
+        return cls.from_parallel(cfg.parallel)
+
+    @classmethod
+    def from_parallel(cls, par) -> "CommSchedule":
         return cls(
             prefetch=par.prefetch,
             reshard_after_forward=par.reshard_after_forward,

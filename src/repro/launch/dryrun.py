@@ -61,14 +61,15 @@ def _with_blocks(cfg, blocks: dict[str, int]):
     return dataclasses.replace(cfg, n_layers=blocks["layers"])
 
 
-def _compile(cfg, shape, mesh, planner, unroll=1):
+def _compile(cfg, shape, mesh, planner, unroll=1, policies=None):
     from ..configs import build_model
     from ..core.fsdp import FSDPRuntime
     from ..optim import make_optimizer
     from .specs import input_specs
 
     model = build_model(cfg)
-    runtime = FSDPRuntime(model, mesh, planner=planner, scan_unroll=unroll)
+    runtime = FSDPRuntime(model, mesh, planner=planner, scan_unroll=unroll,
+                          policies=policies)
     optimizer = make_optimizer(cfg)
     if shape.kind == "train":
         step = runtime.make_train_step(optimizer)
@@ -109,9 +110,11 @@ def _optimizer_cost(runtime, cfg):
 
 def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
             planner: str = "ragged", quiet: bool = False,
-            calibrate: bool = True, overrides: dict | None = None):
-    from ..configs import get_config, supports_shape
+            calibrate: bool = True, overrides: dict | None = None,
+            policies=None):
+    from ..configs import build_model, get_config, supports_shape
     from ..configs.base import SHAPES
+    from ..core.policy import make_plan
     from .mesh import make_production_mesh
     from .roofline import Roofline, model_flops
 
@@ -132,14 +135,22 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
                         chips=chips, compile_ok=False, note=f"SKIP: {why}")
 
     mesh = make_production_mesh(multi_pod=multi_pod)
+    if policies == "auto":
+        # resolve the cost model ONCE on the full model, then pin the
+        # resulting per-group decisions as an explicit PolicySet so the
+        # 1/2-layer calibration variants compile under identical policies
+        policies = make_plan(build_model(cfg), mesh,
+                             "auto").policy_set()
 
     t0 = time.time()
-    compiled, runtime = _compile(cfg, shape, mesh, planner)
+    compiled, runtime = _compile(cfg, shape, mesh, planner,
+                                 policies=policies)
     t_full = time.time() - t0
     mem = compiled.memory_analysis()
     if not quiet:
         from ..compat import cost_analysis
 
+        print(runtime.plan.describe())
         print(mem)
         ca = cost_analysis(compiled)
         print({k: v for k, v in ca.items() if k in ("flops", "bytes accessed")})
@@ -167,14 +178,15 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
     if calibrate:
         base_blocks = {s: 1 for s in stacks}
         cal_cfg = _with_blocks(cfg, base_blocks)
-        cbase, _ = _compile(cal_cfg, shape, mesh, planner, unroll=1)
+        cbase, _ = _compile(cal_cfg, shape, mesh, planner, unroll=1,
+                            policies=policies)
         f_b, b_b, c_b, _ = _costs(cbase)
         bodies = {}
         for s in stacks:
             blocks = dict(base_blocks)
             blocks[s] = 2
             cvar, _ = _compile(_with_blocks(cfg, blocks), shape, mesh,
-                               planner, unroll=2)
+                               planner, unroll=2, policies=policies)
             f_v, b_v, c_v, _ = _costs(cvar)
             bodies[s] = (f_v - f_b, b_v - b_b, c_v - c_b)
         o_f, o_b = (_optimizer_cost(runtime, cfg)
@@ -204,6 +216,36 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
     return r
 
 
+def plan_only(arch: str, *, multi_pod: bool = False, planner: str = "ragged",
+              policies=None) -> str:
+    """Resolve and print the ShardingPlan without compiling anything --
+    plans are auditable in seconds, not compile-minutes.  Planning is pure
+    host-side metadata, so this uses the production mesh's axis *sizes*
+    (no 256/512 virtual devices are created).
+
+    With the default (legacy) policies it also cross-checks the lowering:
+    the plan produced by the config's flat knobs must be JSON-identical to
+    the plan from the explicitly-spelled PolicySet (CI runs this)."""
+    from ..configs import build_model, get_config
+    from ..core.policy import PolicySet, make_plan
+    from .mesh import production_axis_sizes
+
+    cfg = get_config(arch)
+    axes = production_axis_sizes(multi_pod=multi_pod)
+    model = build_model(cfg)
+    p = make_plan(model, axes, policies, planner=planner)
+    out = [p.describe()]
+    if policies is None:
+        explicit = PolicySet.from_parallel_config(cfg.parallel)
+        p2 = make_plan(model, axes, explicit, planner=planner)
+        if p.dumps() != p2.dumps():
+            raise AssertionError(
+                "legacy-config lowering diverged from the explicit "
+                f"PolicySet spelling: {p.diff(p2)}")
+        out.append("plan lowering parity OK (legacy knobs == PolicySet)")
+    return "\n".join(out)
+
+
 def append_result(row: dict, path: pathlib.Path):
     path.parent.mkdir(parents=True, exist_ok=True)
     with open(path, "a") as f:
@@ -217,6 +259,13 @@ def main():
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--planner", default="ragged")
+    ap.add_argument("--policies", default=None,
+                    help="'auto' picks per-group store/comm policies from "
+                         "the structure-aware cost model (core.policy); "
+                         "default lowers the config's legacy knobs")
+    ap.add_argument("--plan-only", action="store_true",
+                    help="resolve + print the ShardingPlan (and check "
+                         "legacy-lowering parity); no compilation")
     ap.add_argument("--no-calibrate", action="store_true")
     ap.add_argument("--optimized", action="store_true",
                     help="apply the beyond-paper §Perf winners "
@@ -226,6 +275,14 @@ def main():
 
     from ..configs import ASSIGNED_ARCH_IDS
     from ..configs.base import SHAPES
+
+    if args.plan_only:
+        archs = ASSIGNED_ARCH_IDS if args.all else [args.arch]
+        for arch in archs:
+            print(f"== {arch} ==")
+            print(plan_only(arch, multi_pod=args.multi_pod,
+                            planner=args.planner, policies=args.policies))
+        return
 
     pairs = (
         [(a, s) for a in ASSIGNED_ARCH_IDS for s in SHAPES]
@@ -247,7 +304,8 @@ def main():
                     ov["parallel"] = OPTIMIZED_PARALLEL[arch]
             r = run_one(arch, shape, multi_pod=args.multi_pod,
                         planner=args.planner,
-                        calibrate=not args.no_calibrate, overrides=ov)
+                        calibrate=not args.no_calibrate, overrides=ov,
+                        policies=args.policies)
             row = r.row()
         except Exception as e:
             traceback.print_exc()
@@ -255,6 +313,7 @@ def main():
                    "mesh": "pod2x16x16" if args.multi_pod else "pod16x16",
                    "ok": False, "note": f"ERROR {type(e).__name__}: {e}"}
         row["planner"] = args.planner
+        row["policies"] = args.policies or "legacy"
         row["profile"] = "optimized" if args.optimized else "baseline"
         print(json.dumps(row))
         append_result(row, out)

@@ -8,10 +8,18 @@ from __future__ import annotations
 from ..compat import make_mesh
 
 
+def production_axis_sizes(*, multi_pod: bool = False) -> dict[str, int]:
+    """Axis-name -> size of the production mesh, as plain metadata --
+    enough for core.policy.plan() to resolve a ShardingPlan without
+    creating the 256/512 virtual devices (dryrun --plan-only)."""
+    if multi_pod:
+        return {"pod": 2, "data": 16, "model": 16}
+    return {"data": 16, "model": 16}
+
+
 def make_production_mesh(*, multi_pod: bool = False):
-    shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return make_mesh(shape, axes)
+    sizes = production_axis_sizes(multi_pod=multi_pod)
+    return make_mesh(tuple(sizes.values()), tuple(sizes))
 
 
 def make_local_mesh(data: int = 1, model: int = 1, pod: int | None = None):

@@ -25,6 +25,10 @@ def main():
     ap.add_argument("--data", type=int, default=1, help="data axis size")
     ap.add_argument("--model", type=int, default=1, help="model axis size")
     ap.add_argument("--planner", default="ragged")
+    ap.add_argument("--policies", default=None,
+                    help="sharding policies: 'auto' runs the structure-"
+                         "aware cost model per group (core.policy); default "
+                         "lowers the config's legacy knobs")
     ap.add_argument("--optimizer", default=None)
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--ckpt-every", type=int, default=0)
@@ -49,7 +53,9 @@ def main():
         cfg = dataclasses.replace(cfg, optimizer=args.optimizer)
     mesh = make_local_mesh(args.data, args.model)
     model = build_model(cfg)
-    runtime = FSDPRuntime(model, mesh, planner=args.planner)
+    runtime = FSDPRuntime(model, mesh, planner=args.planner,
+                          policies=args.policies)
+    print(runtime.plan.describe())
     optimizer = make_optimizer(cfg)
 
     params = runtime.init_params(args.seed)

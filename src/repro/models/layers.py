@@ -175,11 +175,14 @@ def tp_head_counts(n_heads: int, n_kv: int, tp: int) -> tuple[int, int, bool]:
     live in the `layers_rep` group); each device *computes* only the single
     KV head its q-group needs by slicing the weight (grads recombine via the
     replicated-group psum over "model")."""
-    assert n_heads % tp == 0, (n_heads, tp)
+    if n_heads % tp:
+        raise ValueError(f"n_heads={n_heads} not divisible by tp={tp}")
     if tp <= n_kv:
-        assert n_kv % tp == 0
+        if n_kv % tp:
+            raise ValueError(f"n_kv_heads={n_kv} not divisible by tp={tp}")
         return n_heads // tp, n_kv // tp, False
-    assert tp % n_kv == 0
+    if tp % n_kv:
+        raise ValueError(f"tp={tp} not divisible by n_kv_heads={n_kv}")
     return n_heads // tp, n_kv, True
 
 
@@ -273,7 +276,8 @@ def cross_attention(cfg, p, x, memory, *, tp_axis=None, tp=1, prefix="x_"):
     M = memory.shape[1]
     hd = cfg.hd
     hq, hkv, kv_rep = tp_head_counts(cfg.n_heads, cfg.n_kv_heads, tp)
-    assert not kv_rep, "cross-attention with tp > n_kv not supported"
+    if kv_rep:
+        raise ValueError("cross-attention with tp > n_kv is not supported")
 
     q = (rms_norm(x, p[prefix + "lnq"], cfg.norm_eps) @ p[prefix + "wq"].astype(x.dtype)
          ).reshape(B, T, hq, hd).transpose(0, 2, 1, 3)

@@ -30,7 +30,10 @@ class XLSTMModel:
     def __init__(self, cfg):
         self.cfg = cfg
         k = cfg.slstm_every or cfg.n_layers
-        assert cfg.n_layers % k == 0
+        if cfg.n_layers % k:
+            raise ValueError(
+                f"n_layers={cfg.n_layers} not divisible by "
+                f"slstm_every={k}")
         self.per_block = k
         self.n_blocks = cfg.n_layers // k
         self.tp = 1

@@ -68,7 +68,10 @@ class DecoderLM:
         self.ep = cfg.parallel.ep
         self.is_vlm = cfg.cross_attn_interval > 0
         if self.is_vlm:
-            assert cfg.n_layers % cfg.cross_attn_interval == 0
+            if cfg.n_layers % cfg.cross_attn_interval:
+                raise ValueError(
+                    f"n_layers={cfg.n_layers} not divisible by "
+                    f"cross_attn_interval={cfg.cross_attn_interval}")
             self.n_blocks = cfg.n_layers // cfg.cross_attn_interval
             self.selfs_per_block = cfg.cross_attn_interval - 1
         else:
@@ -311,8 +314,8 @@ class DecoderLM:
         """Sequence parallelism: residual stream seq-sharded over the TP
         axis (Megatron-SP); active for multi-token steps that divide."""
         sp = self.cfg.parallel.sequence_parallel and self.tp > 1
-        if sp:
-            assert not self.cfg.n_experts, "SP+MoE not supported"
+        if sp and self.cfg.n_experts:
+            raise ValueError("sequence_parallel with MoE is not supported")
         return sp and T > 1 and T % self.tp == 0
 
     def _embed_in(self, pg, tokens, sp=False):
@@ -386,7 +389,10 @@ class DecoderLM:
         pairs duplicated -- noted in EXPERIMENTS)."""
         cfg = self.cfg
         W = self.cache_window(seq_len)
-        assert self.tp == 1 or self.tp > cfg.n_kv_heads
+        if self.tp > 1 and self.tp <= cfg.n_kv_heads:
+            raise ValueError(
+                f"replicated-KV cache layout needs tp > n_kv_heads; got "
+                f"tp={self.tp}, n_kv_heads={cfg.n_kv_heads}")
         hkv = self.tp if self.tp > 1 else cfg.n_kv_heads
         shape = (self.n_blocks, self.selfs_per_block, batch, hkv, W, cfg.hd)
         return {

@@ -31,10 +31,10 @@ class Adam8bit(OptimizerBase):
     def state_shapes(self, runtime):
         bq = self.block
         for lo in runtime.layouts.values():
-            assert lo.plan.shard_size % bq == 0, (
-                f"group {lo.name}: shard {lo.plan.shard_size} not aligned to "
-                f"quant block {bq} -- planner align missing?"
-            )
+            if lo.plan.shard_size % bq:
+                raise ValueError(
+                    f"group {lo.name}: shard {lo.plan.shard_size} not "
+                    f"aligned to quant block {bq} -- planner align missing?")
         return {
             "m8": self._like_params(runtime, jnp.int8),
             "v8": self._like_params(runtime, jnp.int8),

@@ -1,0 +1,279 @@
+"""ShardingPolicy / ShardingPlan API: selector matching, legacy-knob
+lowering parity (plan-JSON equality between the flat ParallelConfig
+spelling and the explicit PolicySet spelling, on 1- and 8-shard meshes),
+JSON round-trips, runtime-from-plan bitwise parity, and the "auto"
+cost-model planner (dense + MoE, dryrun-level and train-step smoke)."""
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import ckpt
+from repro.configs import build_model, get_config
+from repro.configs.base import ParallelConfig
+from repro.core.fsdp import FSDPRuntime
+from repro.core.policy import (CostModel, GroupInfo, PolicyRule, PolicySet,
+                               ShardingPlan, ShardingPolicy, group_tag, plan)
+from repro.core.schedule import CommSchedule
+from repro.launch.mesh import make_local_mesh
+from repro.optim import make_optimizer
+
+MESH = make_local_mesh(1, 1)
+
+
+def _model(arch="qwen2.5-14b", **par_over):
+    cfg = get_config(arch).reduced()
+    if par_over:
+        cfg = dataclasses.replace(
+            cfg, parallel=dataclasses.replace(cfg.parallel, **par_over))
+    return build_model(cfg)
+
+
+def _train(rt, cfg, steps=2):
+    params = rt.init_params(0)
+    opt = make_optimizer(cfg)
+    state = opt.init(rt)
+    fn = rt.make_train_step(opt)
+    st = jnp.int32(0)
+    rng = np.random.default_rng(0)
+    out = []
+    for _ in range(steps):
+        batch = {"tokens": jnp.asarray(
+            rng.integers(0, cfg.vocab, (4, 16)), jnp.int32)}
+        params, state, st, m = fn(params, state, st, batch)
+        out.append((float(m["loss"]), float(m["grad_norm"])))
+    return out, {k: np.asarray(jax.tree.leaves(v)[0])
+                 for k, v in params.items()}
+
+
+# --------------------------------------------------------------------------- #
+# selectors
+# --------------------------------------------------------------------------- #
+
+def test_rule_matching_glob_tag_predicate():
+    model = _model("granite-moe-1b-a400m")  # layers, layers_experts, globals
+    pset = PolicySet(rules=(
+        PolicyRule(tag="experts", policy=ShardingPolicy(store="q8_block")),
+        PolicyRule(match="glob*", policy=ShardingPolicy(sharded=False)),
+        PolicyRule(where=lambda i: i.n_layers is not None,
+                   policy=ShardingPolicy(store="bf16")),
+    ))
+    p = plan(model, {"data": 8}, pset)
+    assert p.groups["layers_experts"].policy.store == "q8_block"
+    assert p.groups["globals"].policy.sharded is False
+    assert p.groups["layers"].policy.store == "bf16"
+    # the tags themselves
+    assert p.groups["layers_experts"].tag == "experts"
+    assert p.groups["layers"].tag == "layers"
+    assert p.groups["globals"].tag == "globals"
+
+
+def test_first_match_wins():
+    model = _model()
+    pset = PolicySet(rules=(
+        PolicyRule(match="layers", policy=ShardingPolicy(store="bf16")),
+        PolicyRule(tag="layers", policy=ShardingPolicy(store="q8_block")),
+    ))
+    p = plan(model, {"data": 1}, pset)
+    assert p.groups["layers"].policy.store == "bf16"
+
+
+def test_selector_validation():
+    with pytest.raises(ValueError):
+        PolicyRule(policy=ShardingPolicy())  # no selector
+    with pytest.raises(ValueError):
+        PolicyRule(tag="expert", policy=ShardingPolicy())  # not a TAG
+    # scan-structure knobs come from the default, never a rule
+    with pytest.raises(ValueError):
+        PolicySet(rules=(
+            PolicyRule(match="layers", policy=ShardingPolicy(prefetch=True)),
+        ))
+    # policy knobs are validated by CommSchedule at construction
+    with pytest.raises(ValueError):
+        ShardingPolicy(store="q4_block")
+    with pytest.raises(ValueError):
+        ShardingPolicy(gather_mode="nccl")
+
+
+def test_typoed_rule_raises_instead_of_silently_ignoring():
+    model = _model()
+    pset = PolicySet(rules=(
+        PolicyRule(match="layrs", policy=ShardingPolicy(store="bf16")),))
+    with pytest.raises(ValueError, match="matched no communication group"):
+        plan(model, {"data": 8}, pset)
+    # same protection on the legacy spelling (exact-name rules)
+    with pytest.raises(ValueError):
+        FSDPRuntime(_model(), MESH,
+                    group_schedules={"layrs": {"gather_mode": "ring"}})
+
+
+def test_legacy_group_schedules_keys_are_exact_names_not_globs():
+    """Legacy group_schedules keys were always exact group names; a key
+    with glob metacharacters must keep raising (unknown name), never
+    silently become a pattern that matches several groups."""
+    model = _model("granite-moe-1b-a400m")
+    with pytest.raises(ValueError, match="matched no communication group"):
+        FSDPRuntime(model, MESH,
+                    group_schedules={"layers*": {"sharded": False}})
+
+
+# --------------------------------------------------------------------------- #
+# legacy lowering: plan-JSON equality with the explicit PolicySet spelling
+# --------------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("axes", [{"data": 1}, {"data": 8}])
+def test_legacy_lowering_plan_json_equality(axes):
+    par = ParallelConfig(
+        ("data",), ("data",), prefetch=True, reduce_dtype="fp32",
+        group_schedules={"globals": {"sharded": False},
+                         "layers": {"param_store": "q8_block",
+                                    "gather_mode": "ring"}})
+    cfg = dataclasses.replace(get_config("qwen2.5-14b").reduced(),
+                              parallel=par)
+    model = build_model(cfg)
+    legacy = plan(model, axes, None)  # lowers cfg.parallel
+
+    default = ShardingPolicy(prefetch=True, reduce_dtype="fp32")
+    explicit = PolicySet(
+        rules=(
+            PolicyRule(match="globals",
+                       policy=dataclasses.replace(default, sharded=False)),
+            PolicyRule(match="layers",
+                       policy=dataclasses.replace(default, store="q8_block",
+                                                  gather_mode="ring")),
+        ),
+        default=default)
+    spelled = plan(model, axes, explicit)
+    assert legacy.dumps() == spelled.dumps(), legacy.diff(spelled)
+
+
+# --------------------------------------------------------------------------- #
+# the plan artifact: describe / JSON round-trip / diff
+# --------------------------------------------------------------------------- #
+
+def test_plan_json_round_trip_and_describe():
+    model = _model()
+    p = plan(model, {"data": 8},
+             PolicySet(default=ShardingPolicy(store="q8_block")))
+    p2 = ShardingPlan.from_json(json.loads(json.dumps(p.to_json())))
+    assert p2.dumps() == p.dumps()
+    assert p.diff(p2) == []
+    txt = p.describe()
+    assert "layers" in txt and "globals" in txt and "q8_block" in txt
+    assert str(p.groups["layers"].plan.shard_size) in txt
+
+
+def test_plan_diff_names_the_field():
+    model = _model()
+    a = plan(model, {"data": 8}, ShardingPolicy())
+    b = plan(model, {"data": 8}, ShardingPolicy(store="bf16"))
+    d = a.diff(b)
+    assert d and any("store" in line for line in d)
+
+
+# --------------------------------------------------------------------------- #
+# runtime consumes a plan (bitwise vs legacy spelling, incl. via JSON)
+# --------------------------------------------------------------------------- #
+
+def _assert_bitwise(ref, tst):
+    ref_m, ref_p = ref
+    tst_m, tst_p = tst
+    assert ref_m == tst_m
+    for k in ref_p:
+        np.testing.assert_array_equal(ref_p[k], tst_p[k])
+
+
+def test_runtime_from_plan_bitwise_matches_legacy():
+    cfg = get_config("qwen2.5-14b").reduced()
+    sched = CommSchedule(prefetch=True, reduce_dtype="fp32")
+    ref = _train(FSDPRuntime(build_model(cfg), MESH, schedule=sched,
+                             donate=False), cfg)
+
+    model = build_model(cfg)
+    p = plan(model, MESH, PolicySet(
+        default=ShardingPolicy(prefetch=True, reduce_dtype="fp32")))
+    tst = _train(FSDPRuntime(model, MESH, plan=p, donate=False), cfg)
+    _assert_bitwise(ref, tst)
+
+    # a plan restored from JSON reconstructs the exact layout
+    restored = ShardingPlan.from_json(p.to_json())
+    tst2 = _train(FSDPRuntime(build_model(cfg), MESH, plan=restored,
+                              donate=False), cfg)
+    _assert_bitwise(ref, tst2)
+
+
+def test_runtime_plan_mismatches_raise():
+    model = _model()
+    p = plan(model, {"data": 8}, ShardingPolicy())
+    with pytest.raises(ValueError, match="mesh"):
+        FSDPRuntime(model, MESH, plan=p)  # 8-shard plan on a 1-device mesh
+    p1 = plan(model, MESH, ShardingPolicy())
+    with pytest.raises(ValueError, match="either plan="):
+        FSDPRuntime(model, MESH, plan=p1, schedule=CommSchedule())
+    with pytest.raises(ValueError, match="compute dtype"):
+        FSDPRuntime(model, MESH, plan=p1, compute_dtype=jnp.float32)
+
+
+# --------------------------------------------------------------------------- #
+# the auto planner
+# --------------------------------------------------------------------------- #
+
+def test_auto_picks_q8_for_bandwidth_bound_stacks_and_fp32_on_one_device():
+    for arch in ("qwen2.5-14b", "granite-moe-1b-a400m"):
+        model = _model(arch)
+        p8 = plan(model, {"data": 8}, "auto")
+        for name, e in p8.groups.items():
+            if e.n_layers:  # stacked groups: quantized wire pays at m > 1
+                assert e.policy.store == "q8_block", (arch, name)
+        # tiny unstacked globals at reduced scale: replicated
+        assert p8.groups["globals"].policy.sharded is False
+        p1 = plan(model, {"data": 1}, "auto")
+        for name, e in p1.groups.items():  # no wire -> stay exact fp32
+            assert e.policy.store == "fp32", (arch, name)
+            assert e.policy.sharded is True, (arch, name)
+
+
+def test_auto_respects_replicate_threshold():
+    model = _model()
+    cm = CostModel.default()
+    none = dataclasses.replace(cm, replicate_bytes=0)
+    p = plan(model, {"data": 8}, "auto", cost_model=none)
+    assert p.groups["globals"].policy.sharded is True
+
+
+@pytest.mark.parametrize("arch", ["qwen2.5-14b", "granite-moe-1b-a400m"])
+def test_auto_train_step_smoke(arch):
+    """policies="auto" end-to-end: plan -> runtime -> 2 train steps."""
+    cfg = get_config(arch).reduced()
+    rt = FSDPRuntime(build_model(cfg), MESH, policies="auto", donate=False)
+    metrics, _ = _train(rt, cfg)
+    assert all(np.isfinite(l) and np.isfinite(g) for l, g in metrics)
+
+
+# --------------------------------------------------------------------------- #
+# checkpoint integration
+# --------------------------------------------------------------------------- #
+
+def test_checkpoint_saves_plan_json(tmp_path):
+    cfg = get_config("qwen2.5-14b").reduced()
+    rt = FSDPRuntime(build_model(cfg), MESH, donate=False)
+    params = rt.init_params(0)
+    ckpt.save(tmp_path / "ck", rt, params)
+    saved = ckpt.load_plan(tmp_path / "ck")
+    assert saved is not None
+    assert saved.dumps() == rt.plan.dumps()
+    assert ckpt.load_plan(tmp_path) is None  # pre-plan checkpoints
+
+
+def test_group_info_and_tags():
+    model = _model("granite-moe-1b-a400m")
+    groups = model.groups()
+    tags = {n: group_tag(n, g) for n, g in groups.items()}
+    assert tags["layers"] == "layers"
+    assert tags["layers_experts"] == "experts"
+    assert tags["globals"] == "globals"
+    info = GroupInfo("layers", "layers", 2, groups["layers"].specs)
+    assert info.payload == 2 * sum(s.size for s in groups["layers"].specs)

@@ -290,6 +290,47 @@ def test_prefetch_scan_carry_has_no_gathered_buffers():
         "gathered layer buffer rides a scan carry", gathered)
 
 
+def _pair_barrier_eqns(closed_jaxpr, gathered_avals):
+    """optimization_barrier eqns whose operands include >= 2 gathered layer
+    buffers -- the explicit two-slot issue-order pin in the pair scan."""
+    found = []
+
+    def walk(jaxpr):
+        for eqn in jaxpr.eqns:
+            if eqn.primitive.name == "optimization_barrier":
+                hits = sum(
+                    (tuple(v.aval.shape), str(v.aval.dtype)) in gathered_avals
+                    for v in eqn.invars)
+                if hits >= 2:
+                    found.append(eqn)
+            for val in eqn.params.values():
+                for sub in _iter_subjaxprs(val):
+                    walk(sub)
+
+    walk(closed_jaxpr.jaxpr)
+    return found
+
+
+def test_pair_prefetch_issue_order_is_explicit_in_backward():
+    """ROADMAP "schedule work remaining": the backward re-gather issue
+    order of the pair scan must be explicit, mirroring the forward's
+    two-slot order, instead of left to XLA's scheduler.  The pin is an
+    optimization_barrier over BOTH slots' gathered buffers; because remat
+    replays it, it must appear at least twice in the full train-step jaxpr
+    (the forward pair scan and the backward scan's recompute).  The default
+    sequential schedule has no such pair barrier."""
+    rt, pre = _step_jaxpr(VARIANTS["overlap_all"], n_layers=6)
+    gathered = {((lo.sharded_dim,), str(jnp.dtype(rt.compute_dtype)))
+                for lo in rt.layouts.values() if lo.n_layers}
+    pins = _pair_barrier_eqns(pre, gathered)
+    assert len(pins) >= 2, (
+        "pair scan's two-slot gather issue order is not pinned in both "
+        f"forward and backward (found {len(pins)} pair barriers)")
+    _, ref = _step_jaxpr(CommSchedule.default(), n_layers=6)
+    assert not _pair_barrier_eqns(ref, gathered), (
+        "sequential schedule unexpectedly contains a pair gather barrier")
+
+
 # --------------------------------------------------------------------------- #
 # 8-device ring parity (subprocess: jax fixes the device count at first init)
 # --------------------------------------------------------------------------- #
