@@ -79,12 +79,16 @@ def run_schedules(quick: bool = False, arch: str = "gpt-oss-120b"):
     cost/benefit of prefetch double-buffering, ring vs xla gathers,
     skipping reshard, wire/reduce dtype choices (all numerically identical
     on one device), plus the approx variants (ring_acc reduce, q8_block
-    stores).  ``gathered_peak_mb`` is the analytic peak of live gathered
-    layer buffers -- the quantity the two-slot prefetch bounds at 2 per
-    depth (the retention bug made it n_layers).  ``gather_wire_mb`` is the
-    bytes one forward pass's parameter all-gathers put on the wire: compare
-    the fp32_wire row (4 B/element) against the q8 rows (1 B/element codes
-    + per-block scales) for the ~4x quantized-store drop."""
+    stores, the q8_block gradient reduce wire).  ``gathered_peak_mb`` is
+    the analytic peak of live gathered layer buffers -- the quantity the
+    two-slot prefetch bounds at 2 per depth (the retention bug made it
+    n_layers).  ``gather_wire_mb`` is the bytes one forward pass's
+    parameter all-gathers put on the wire: compare the fp32_wire row
+    (4 B/element) against the q8 rows (1 B/element codes + per-block
+    scales) for the ~4x quantized-store drop.  ``reduce_wire_mb`` is the
+    mirror for the gradient direction: compare fp32_reduce (4 B/element)
+    against the q8_reduce rows for the same >=3x QSDP gradient-wire
+    drop."""
     cfg, batch = _bench_cfg(arch, quick)
     mesh = make_local_mesh(1, 1)
     out = {}
@@ -109,6 +113,7 @@ def run_schedules(quick: bool = False, arch: str = "gpt-oss-120b"):
              f"temp_mb={temp/1e6:.1f};"
              f"gathered_peak_mb={rt.gathered_peak_bytes()/1e6:.2f};"
              f"gather_wire_mb={rt.gather_wire_bytes()/1e6:.2f};"
+             f"reduce_wire_mb={rt.reduce_wire_bytes()/1e6:.2f};"
              f"speedup_vs_default={base/us:.3f};"
              f"{sched.describe().replace(' ', ';')}")
     return out

@@ -35,6 +35,10 @@ def save(path, runtime, params, opt_state=None, step: int = 0):
                 "mode": lo.plan.mode,
                 "store": lo.store.fmt,
                 "quant_block": lo.store.block,
+                # reduce-wire error-feedback residual chunks (0 = none);
+                # the residual checkpoints alongside the weights so EF
+                # history survives restarts
+                "ef_m": lo.store.ef_m,
             }
             for name, lo in runtime.layouts.items()
         },
@@ -100,23 +104,33 @@ def load(path, runtime, opt_state_like=None):
             and saved["mode"] == lo.plan.mode
         )
         sharding = NamedSharding(runtime.mesh, lo.pspec())
-        same_store = saved_store == lo.store.fmt and (
-            not lo.store.quantized
-            or saved.get("quant_block") == lo.store.block)
+        same_store = (
+            saved_store == lo.store.fmt
+            and saved.get("ef_m", 0) == lo.store.ef_m
+            and (not (lo.store.quantized or lo.store.has_ef)
+                 or saved.get("quant_block") == lo.store.block))
+        keys = lo.store.state_keys()
         if same_plan and same_store:
-            if lo.store.quantized:
-                state = {leaf: data[f"param__{name}__{leaf}"]
-                         for leaf in ("codes", "master", "scales")}
+            if keys is not None:
+                # dict states (q8 and/or EF residual) restore per leaf;
+                # bf16 leaves were widened to fp32 on disk (_savable) --
+                # narrow back to the leaf dtype, an exact round-trip
+                state = {
+                    leaf: np.asarray(
+                        jnp.asarray(data[f"param__{name}__{leaf}"])
+                        .astype(lo.store.leaf_dtype(leaf)))
+                    for leaf in keys}
             else:
-                # bf16 buffers are widened to fp32 on disk (_savable);
-                # narrow back to the store dtype -- exact round-trip
                 state = np.asarray(
                     jnp.asarray(data[f"param__{name}"])
                     .astype(lo.store.storage_dtype))
         else:
-            master = _saved_master(data, name, saved_store)
+            master = _saved_master(data, name, saved_store,
+                                   saved.get("ef_m", 0))
             if not same_plan:
                 master = _repack(master, saved, lo)
+            # cross-plan/format rebuild: EF residuals restart at zero (a
+            # fresh error-feedback history is always valid)
             state = lo.store.create(master)
         params[name] = jax.tree.map(
             lambda a: jax.device_put(a, sharding), state)
@@ -146,9 +160,11 @@ def load_plan(path):
     return ShardingPlan.from_json(json.loads(f.read_text()))
 
 
-def _saved_master(data, name: str, saved_store: str) -> np.ndarray:
-    """fp32 master weights of one group from a saved state of any format."""
-    if saved_store == "q8_block":
+def _saved_master(data, name: str, saved_store: str,
+                  saved_ef_m: int = 0) -> np.ndarray:
+    """fp32 master weights of one group from a saved state of any format
+    (dict states -- quantized and/or EF-carrying -- save a master leaf)."""
+    if saved_store == "q8_block" or saved_ef_m:
         return np.asarray(data[f"param__{name}__master"], np.float32)
     return np.asarray(data[f"param__{name}"], np.float32)
 

@@ -132,6 +132,30 @@ optimization_barrier.defvjp(_ob_fwd, _ob_bwd)
 
 
 # --------------------------------------------------------------------------- #
+# float8 dtypes (guarded)
+# --------------------------------------------------------------------------- #
+def float8_dtypes() -> dict:
+    """The float8 dtypes this JAX installation provides, as
+    ``{wire-format alias: dtype}`` (``fp8_e4m3`` -> float8_e4m3fn,
+    ``fp8_e5m2`` -> float8_e5m2).  Empty on installations without ml_dtypes
+    float8 support.  core.wire registers these as legal cast wire formats
+    (and, eventually, ParamStore formats) only when present, so call sites
+    never need a version check of their own."""
+    import jax.numpy as _jnp
+
+    out = {}
+    for alias, attr in (("fp8_e4m3", "float8_e4m3fn"),
+                        ("fp8_e5m2", "float8_e5m2")):
+        dt = getattr(_jnp, attr, None)
+        if dt is not None:
+            out[alias] = _jnp.dtype(dt)
+    return out
+
+
+HAS_FP8 = bool(float8_dtypes())
+
+
+# --------------------------------------------------------------------------- #
 # compiled-artifact introspection
 # --------------------------------------------------------------------------- #
 def cost_analysis(compiled) -> dict:

@@ -50,8 +50,17 @@ class ParallelConfig:
     # grad reduce-scatter dtype (None=wire).  When set, it also pins the
     # accumulate dtype of the replica gradient psums -- notably the HSDP
     # cross-pod psum in FSDPRuntime._reduce_grads ("fp32" buys exact
-    # cross-pod accumulation for 2x reduce bandwidth)
+    # cross-pod accumulation for 2x reduce bandwidth).  Legacy spelling:
+    # lowers bitwise-neutrally onto reduce_wire's cast codecs
     reduce_dtype: Optional[str] = None
+    # wire FORMAT of the gradient reduce-scatter (core.wire.WireCodec):
+    # None derives a cast codec from reduce_dtype / the gather wire dtype
+    # (the legacy path, bit for bit); "fp32"/"bf16" name the cast codec;
+    # "q8_block" is the QSDP-style quantized gradient wire -- int8 codes +
+    # per-block scales (~4x fewer bytes than fp32) with per-shard
+    # error-feedback residuals in the param state tree.  Mutually
+    # exclusive with reduce_dtype
+    reduce_wire: Optional[str] = None
     # "xla" = lax.all_gather/psum_scatter, overlap left to XLA's
     # latency-hiding scheduler; "ring" = explicit lax.ppermute chunk ring
     # (bitwise identical to xla; issue order visible in the HLO)

@@ -48,7 +48,7 @@ from .dbuffer import DBuffer
 from .policy import PolicySet, ShardingPlan, make_plan
 from .ragged import TensorSpec
 from .schedule import CommSchedule
-from .store import ParamStore
+from .store import EF_KEY, ParamStore
 
 
 # ---------------------------------------------------------------------------
@@ -282,10 +282,60 @@ class FSDPRuntime:
         par = self.cfg.parallel
         pspecs = self._param_specs()
 
+        # groups whose reduce wire runs error feedback: their trainable
+        # tree carries the residual, whose "gradient" is the updated
+        # residual (core.wire EF primitives) -- split out of the grad tree
+        # before loss scaling / replica psums, re-attached after the
+        # optimizer update
+        ef_groups = tuple(n for n, lo in self.layouts.items()
+                          if lo.store.has_ef)
+        if ef_groups and par.microbatches > 1:
+            raise ValueError(
+                f"reduce_wire='q8_block' (groups {list(ef_groups)}) does "
+                f"not compose with gradient accumulation "
+                f"(microbatches={par.microbatches}): each microbatch's "
+                f"backward would re-apply and re-emit the same error-"
+                f"feedback residual")
+        for n in ef_groups:
+            # groups whose grads are additionally psum'd over replica axes
+            # (_reduce_grads: HSDP cross-pod, TP-replicated) would compute
+            # a DIFFERENT residual per replica -- violating the state's
+            # declared replication on those axes and corrupting EF through
+            # a checkpoint (which saves one replica).  Quantized replica
+            # reductions are a ROADMAP item; reject the combination.
+            lo = self.layouts[n]
+            replica = []
+            if lo.gdef.replicated_over_model and self.tp > 1:
+                replica.append("model")
+            if (self.has_pod and "pod" not in lo.fsdp_axes
+                    and "pod" not in lo.grad_sync_axes):
+                replica.append("pod")
+            if replica:
+                raise ValueError(
+                    f"reduce_wire='q8_block' on group {n!r} is unsupported "
+                    f"with replica gradient axes {replica}: the error-"
+                    f"feedback residual would diverge across replicas "
+                    f"(quantized replica reductions are future work; use a "
+                    f"cast reduce wire for this group)")
+
+        def split_ef(raw):
+            """(master grads, updated EF residuals) from the raw grad tree
+            of ``trainable`` -- residuals must not see grad scaling,
+            replica psums, or the grad-norm."""
+            grads, efs = {}, {}
+            for n, g in raw.items():
+                if n in ef_groups:
+                    grads[n] = g["master"]
+                    efs[n] = g[EF_KEY]
+                else:
+                    grads[n] = g
+            return grads, efs
+
         def step_fn(params, opt_state, step, batch):
             def sharded(params, opt_state, step, batch):
                 # split each group's store state into the differentiable
-                # part (the master/storage buffer the grads target) and the
+                # part (the master/storage buffer the grads target, plus
+                # the reduce-wire EF residual when one exists) and the
                 # frozen payload (q8 codes/scales, closed over as
                 # constants).  For fp32 stores trainable IS the params dict,
                 # so the autodiff graph is unchanged from the seed.
@@ -325,6 +375,11 @@ class FSDPRuntime:
                     (nll, w), grads = jax.value_and_grad(
                         loss_of, has_aux=True)(trainable, batch)
 
+                # the EF residuals ride back through the grad tree (their
+                # cotangent IS the updated residual); peel them off before
+                # any scaling -- residuals live in unscaled cotangent units
+                grads, new_efs = split_ef(grads)
+
                 # cross-device normalization
                 nll_g = lax.psum(nll, self.batch_axes) if self.batch_axes else nll
                 w_g = lax.psum(w, self.batch_axes) if self.batch_axes else w
@@ -333,6 +388,11 @@ class FSDPRuntime:
                 grads = jax.tree.map(lambda g: g * scale, grads)
                 new_params, new_opt = optimizer.update(
                     self, params, grads, opt_state, step)
+                for n in ef_groups:
+                    # optimizers are EF-oblivious (rebuild returns the core
+                    # state); re-attach the updated residual here
+                    new_params[n] = self.layouts[n].store.attach_ef(
+                        new_params[n], new_efs[n])
                 metrics = {
                     "loss": nll_g / jnp.maximum(w_g, 1.0),
                     "tokens": w_g,
@@ -358,17 +418,21 @@ class FSDPRuntime:
         groups psum over 'model'; schedule-unsharded groups psum over their
         would-be FSDP axes; HSDP psums over 'pod'.
 
-        When the group's schedule pins a reduce dtype, these replica psums
-        accumulate in it (the fp32 option matters for the HSDP cross-pod
-        sum at paper scale); with reduce_dtype=None they run in whatever
-        dtype the grads arrive in, which preserves the seed trajectory."""
+        When the group's schedule pins a reduce dtype or wire, these
+        replica psums accumulate in the resolved accum dtype (the fp32
+        option matters for the HSDP cross-pod sum at paper scale; a
+        quantized reduce wire accumulates in fp32, and its replica psums
+        stay full-precision -- only the reduce-scatter is quantized); with
+        neither set they run in whatever dtype the grads arrive in, which
+        preserves the seed trajectory."""
         cd = jnp.dtype(self.compute_dtype)
         out = {}
         for name, g in grads.items():
             lo = self.layouts[name]
             sched = self.sched_for(name)
-            ad = (sched.accum_dtype(cd) if sched.reduce_dtype is not None
-                  else jnp.dtype(g.dtype))
+            pinned = (sched.reduce_dtype is not None
+                      or sched.reduce_wire is not None)
+            ad = sched.accum_dtype(cd) if pinned else jnp.dtype(g.dtype)
 
             def _psum(v, axes, ad=ad):
                 if ad != v.dtype:
@@ -426,6 +490,13 @@ class FSDPRuntime:
         ``ShardingPlan`` (same accounting, now a plan-level prediction
         available before a runtime exists)."""
         return self.plan.gather_wire_bytes()
+
+    def reduce_wire_bytes(self) -> int:
+        """Analytic bytes ONE gradient reduce-scatter pass puts on the
+        wire, per reduced copy, in each group's reduce WireCodec -- the
+        mirror of ``gather_wire_bytes`` (the q8_block gradient wire cuts
+        this ~4x vs an fp32 reduce).  Delegates to the plan."""
+        return self.plan.reduce_wire_bytes()
 
     # ------------------------------------------------------------------ #
     # serving steps (ZeRO-3 inference: per-layer gather, sharded at rest)

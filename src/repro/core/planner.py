@@ -52,8 +52,10 @@ def _earliest_start(pos: int, e: int, g: int, S: int,
     per-device shard size S, such that no shard boundary splits a block.
 
     ``align`` additionally rounds starts up to a multiple (used by quantized
-    groups so fixed-size quant tiles over the local shard never straddle a
-    tensor start; S is always a multiple of align via g_coll).
+    groups -- q8 stores, 8-bit optimizer state, and the q8_block gradient
+    reduce wire, whose reduce-scatter chunks are shard-sized -- so
+    fixed-size quant tiles over the local shard never straddle a tensor
+    start; S is always a multiple of align via g_coll).
     """
     cands: list[int] = []
 

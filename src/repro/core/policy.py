@@ -99,6 +99,7 @@ class ShardingPolicy:
     reduce_mode: str = "match"     # match | ring_acc
     gather_dtype: Optional[str] = None   # all-gather wire dtype (None=compute)
     reduce_dtype: Optional[str] = None   # grad reduce dtype (None=wire)
+    reduce_wire: Optional[str] = None    # grad reduce WireCodec (None=dtype)
     prefetch: bool = False               # two-slot double-buffered gathers
     reshard_after_forward: bool = True   # ZeRO-3 backward re-gather
     keep_last_gathered: bool = False     # last layer stays gathered
@@ -117,6 +118,7 @@ class ShardingPolicy:
             gather_mode=self.gather_mode,
             reduce_mode=self.reduce_mode,
             param_store=self.store,
+            reduce_wire=self.reduce_wire,
             sharded=self.sharded,
         )
 
@@ -128,6 +130,7 @@ class ShardingPolicy:
             reduce_mode=sched.reduce_mode,
             gather_dtype=sched.gather_dtype,
             reduce_dtype=sched.reduce_dtype,
+            reduce_wire=sched.reduce_wire,
             prefetch=sched.prefetch,
             reshard_after_forward=sched.reshard_after_forward,
             keep_last_gathered=sched.keep_last_gathered,
@@ -137,7 +140,7 @@ class ShardingPolicy:
     def describe(self) -> str:
         return (f"{self.store} {self.gather_mode}/{self.reduce_mode} "
                 f"g={self.gather_dtype or 'compute'} "
-                f"r={self.reduce_dtype or 'wire'}"
+                f"r={self.reduce_wire or self.reduce_dtype or 'wire'}"
                 f"{'' if self.sharded else ' replicated'}")
 
 
@@ -263,6 +266,16 @@ class PolicySet:
 # the resolved plan artifact
 # --------------------------------------------------------------------------- #
 
+def store_for(policy: ShardingPolicy, quant_block: int, m: int) -> ParamStore:
+    """THE policy -> ParamStore mapping: the EF residual exists iff the
+    policy's reduce wire is quantized, sized by the group's FSDP world m.
+    Used both by ``plan()``'s align/shard-size validation and by
+    ``GroupPlanEntry.store`` (what the runtime consumes), so the two can
+    never diverge."""
+    return ParamStore(policy.store, quant_block,
+                      ef_m=m if policy.to_schedule().ef_enabled else 0)
+
+
 @dataclasses.dataclass(frozen=True)
 class GroupPlanEntry:
     """One group's resolved slice of a ShardingPlan: the policy that won,
@@ -282,8 +295,13 @@ class GroupPlanEntry:
     quant_block: int
 
     @property
+    def fsdp_world(self) -> int:
+        """The group's FSDP world size m (1 for unsharded groups)."""
+        return int(np.prod(self.fsdp_axis_sizes)) if self.fsdp_axes else 1
+
+    @property
     def store(self) -> ParamStore:
-        return ParamStore(self.policy.store, self.quant_block)
+        return store_for(self.policy, self.quant_block, self.fsdp_world)
 
     def schedule(self) -> CommSchedule:
         return self.policy.to_schedule()
@@ -302,13 +320,44 @@ class GroupPlanEntry:
                                           self.schedule().wire_dtype(cd))
         return per_layer * (self.n_layers or 1)
 
+    def reduce_wire_bytes(self, compute_dtype) -> int:
+        """Bytes one gradient reduce-scatter of this group puts on the
+        wire, per reduced copy, in the group's reduce WireCodec -- the
+        mirror of ``gather_wire_bytes`` (unsharded groups reduce via psum,
+        accounted as zero here).  Unlike the gather side, reduce *routes*
+        do NOT all ship the same volume: the order-exact routes (ring
+        gather mode's match reduce, and any match-mode q8 reduce, which
+        must route un-reduced chunks) carry m/2 x the payload of the
+        bandwidth-optimal psum_scatter/ring_acc routes, so that multiplier
+        is included here -- the table tells the truth about a match-mode
+        q8 wire costing MORE than fp32 psum_scatter at large m.  The
+        >=3x-below-fp32 figure ``bench_e2e --schedule`` reports as
+        ``reduce_wire_mb`` is the bandwidth-optimal q8 route (what
+        ``policies='auto'`` emits: q8 paired with ring_acc)."""
+        import jax.numpy as jnp
+
+        if not self.fsdp_axes:
+            return 0
+        sched = self.schedule()
+        codec = sched.reduce_codec(jnp.dtype(compute_dtype),
+                                   self.quant_block)
+        per = codec.wire_bytes(self.plan.total)
+        m = self.fsdp_world
+        order_exact = (sched.reduce_mode == "match"
+                       and (codec.quantized or sched.gather_mode == "ring"))
+        if order_exact and m > 1:
+            per = per * m // 2  # un-reduced chunk routing, n(n-1)/2 hops
+        return per * (self.n_layers or 1)
+
     def param_bytes(self) -> int:
         """Stored bytes per device for this group's param state (master +
-        any quantized payload), across the layer stack."""
+        any quantized payload + the reduce-wire EF residual, which is m
+        shard-lengths of fp32 per device), across the layer stack."""
         s = self.store
         per_elem = (
             s.storage_dtype.itemsize if not s.quantized
             else 1 + 4 + 4.0 / s.block)  # codes + fp32 master + scales
+        per_elem += 4.0 * s.ef_m         # fp32 EF residual (m shards)
         local = self.plan.shard_size if self.fsdp_axes else self.plan.total
         return int(local * per_elem * (self.n_layers or 1))
 
@@ -352,10 +401,15 @@ class ShardingPlan:
         return sum(e.gather_wire_bytes(self.compute_dtype)
                    for e in self.groups.values())
 
+    def reduce_wire_bytes(self) -> int:
+        return sum(e.reduce_wire_bytes(self.compute_dtype)
+                   for e in self.groups.values())
+
     # ---- inspection ------------------------------------------------------ #
     def describe(self) -> str:
-        """The audit table: per-group policy, shard size S, padding, and
-        predicted gather wire -- what ``dryrun --plan-only`` and
+        """The audit table: per-group policy (including each group's
+        reduce wire format), shard size S, padding, and predicted wire
+        bytes for both comm directions -- what ``dryrun --plan-only`` and
         ``bench_e2e --schedule`` print."""
         mesh = ",".join(f"{a}={s}" for a, s in self.axis_sizes.items())
         head = (f"ShardingPlan mesh[{mesh}] planner={self.planner} "
@@ -364,16 +418,16 @@ class ShardingPlan:
                 f"reshard={int(self.base.reshard_after_forward)} "
                 f"keep_last={int(self.base.keep_last_gathered)}]")
         cols = ["group", "tag", "L", "m", "S", "pad%", "policy",
-                "gather_wire_mb"]
+                "gather_wire_mb", "reduce_wire_mb"]
         rows = []
         for name, e in self.groups.items():
-            m = int(np.prod(e.fsdp_axis_sizes)) if e.fsdp_axes else 1
             rows.append([
-                name, e.tag, str(e.n_layers or "-"), str(m),
+                name, e.tag, str(e.n_layers or "-"), str(e.fsdp_world),
                 str(e.plan.shard_size),
                 f"{100 * e.plan.padding_ratio:.2f}",
                 e.policy.describe(),
                 f"{e.gather_wire_bytes(self.compute_dtype) / 1e6:.3f}",
+                f"{e.reduce_wire_bytes(self.compute_dtype) / 1e6:.3f}",
             ])
         widths = [max(len(c), *(len(r[i]) for r in rows)) if rows else len(c)
                   for i, c in enumerate(cols)]
@@ -408,6 +462,8 @@ class ShardingPlan:
                     "quant_block": e.quant_block,
                     "gather_wire_mb": round(
                         e.gather_wire_bytes(self.compute_dtype) / 1e6, 6),
+                    "reduce_wire_mb": round(
+                        e.reduce_wire_bytes(self.compute_dtype) / 1e6, 6),
                     "param_mb": round(e.param_bytes() / 1e6, 6),
                     "placements": [
                         {"name": p.spec.name, "shape": list(p.spec.shape),
@@ -540,6 +596,57 @@ class CostModel:
                 best, best_t = fmt, t
         return best
 
+    # ---- reduce direction (the gradient wire) ---------------------------- #
+    # reduce wire candidates in preference order: None keeps the legacy
+    # dtype wire (compute/accum dtype -- exact), "q8_block" is the QSDP
+    # quantized gradient wire.  Ties break toward the exact wire.
+    REDUCE_CANDIDATES = (None, "q8_block")
+
+    def reduce_time(self, fmt: Optional[str], elems_per_layer: int,
+                    n_layers: int, m: int, quant_block: int,
+                    compute_itemsize: int) -> float:
+        """Predicted per-step gradient reduce-scatter seconds for one group
+        under reduce wire ``fmt`` (one reduce per layer per step).  The
+        quantized wire pays local encode/decode HBM traffic plus the
+        error-feedback residual read+write (fp32, contribution-sized) --
+        the roofline now prices *both* comm directions, so the auto
+        planner only takes the q8 gradient wire where the step is
+        genuinely wire-bound.
+
+        The (m-1)/m ring volume here models the bandwidth-optimal routes:
+        psum_scatter / ring_acc.  The *order-exact* q8 route
+        (reduce_mode="match") ships un-reduced chunks at (m-1)/2 x the
+        payload -- the price of bitwise reproducibility -- so
+        ``auto_policies`` pairs a q8 reduce wire with
+        ``reduce_mode="ring_acc"``, the configuration this price is true
+        of (DESIGN.md §Wire formats)."""
+        from .wire import WireCodec
+
+        codec = (WireCodec("q8_block", quant_block) if fmt == "q8_block"
+                 else WireCodec("fp32" if compute_itemsize == 4 else "bf16"))
+        wire = codec.wire_bytes(elems_per_layer)
+        ring = (m - 1) / m if m > 1 else 0.0
+        t = n_layers * (wire * ring / self.ici_bw + self.gather_latency_s)
+        if codec.quantized:
+            # encode (read fp32 ct + ef, write codes+scales+ef) and decode
+            # (read m contributions' codes+scales, write the fp32 shard)
+            enc = elems_per_layer * (4 + 1 + 4.0 / quant_block + 2 * 4)
+            dec = elems_per_layer * (1 + 4.0 / quant_block) + 4 * (
+                elems_per_layer / max(m, 1))
+            t += n_layers * (enc + dec) / self.hbm_bw
+        return t
+
+    def choose_reduce_wire(self, elems_per_layer: int, n_layers: int,
+                           m: int, quant_block: int,
+                           compute_itemsize: int) -> Optional[str]:
+        best, best_t = None, None
+        for fmt in self.REDUCE_CANDIDATES:
+            t = self.reduce_time(fmt, elems_per_layer, n_layers, m,
+                                 quant_block, compute_itemsize)
+            if best_t is None or t < best_t:
+                best, best_t = fmt, t
+        return best
+
 
 def auto_policies(model, axis_sizes: Mapping[str, int],
                   compute_dtype=None,
@@ -571,7 +678,27 @@ def auto_policies(model, axis_sizes: Mapping[str, int],
             fmt = cm.choose_store(elems, n_layers, m, cfg.quant_block,
                                   cd.itemsize,
                                   reshard=default.reshard_after_forward)
-            pol = dataclasses.replace(default, store=fmt)
+            # price the gradient direction too: bandwidth-bound stacks take
+            # the QSDP q8 gradient wire (error feedback keeps convergence
+            # at full-precision quality; see DESIGN.md §Wire formats).
+            # The EF wire does not compose with gradient accumulation, and
+            # EF residuals would diverge across replica gradient axes
+            # (HSDP cross-pod, TP-replicated groups) -- the runtime rejects
+            # both, so 'auto' must only score legal candidates
+            replica_grads = (
+                ("pod" in axis_sizes and not cfg.parallel.pod_fsdp)
+                or (gdef.replicated_over_model and cfg.parallel.tp > 1))
+            rwire = (None if (cfg.parallel.microbatches > 1 or replica_grads)
+                     else cm.choose_reduce_wire(elems, n_layers, m,
+                                                cfg.quant_block,
+                                                cd.itemsize))
+            pol = dataclasses.replace(default, store=fmt, reduce_wire=rwire)
+            if rwire == "q8_block":
+                # the cost model prices the bandwidth-optimal route; the
+                # order-exact match-mode q8 routing ships (m-1)/2 x the
+                # payload, so pair the quantized gradient wire with the
+                # accumulate-in-flight ring it is actually cheap on
+                pol = dataclasses.replace(pol, reduce_mode="ring_acc")
         if pol != default:
             rules.append(PolicyRule(match=name, policy=pol))
     return PolicySet(rules=tuple(rules), default=default)
@@ -686,10 +813,13 @@ def plan(model, mesh, policies=None, *, planner: str = "ragged",
             grad_sync_axes, fsdp_axes = fsdp_axes, ()
         m = int(np.prod([axis_sizes[a] for a in fsdp_axes])) or 1
 
-        store = ParamStore(sched.param_store, cfg.quant_block)
+        store = store_for(pol, cfg.quant_block, m)
         # quant blocks must never straddle a shard boundary or a tensor
-        # start -- for the 8-bit optimizer states AND for any group whose
-        # *store* is quantized (the paper's block-wise quantized training)
+        # start -- for the 8-bit optimizer states, for any group whose
+        # *store* is quantized (the paper's block-wise quantized training),
+        # AND for a quantized *reduce wire* (reduce-scatter chunks are
+        # shard-sized, so S must be a block multiple for the gradient
+        # quantization to stay communication-free)
         align = max(
             store.align(),
             cfg.quant_block if cfg.optimizer == "adam8bit" else 1,
@@ -698,12 +828,13 @@ def plan(model, mesh, policies=None, *, planner: str = "ragged",
             gplan = plan_group(local_specs, m, g_coll=LANE, align=align)
         else:
             gplan = planner_fn(local_specs, m)
-        if store.quantized and gplan.shard_size % store.block:
+        if ((store.quantized or sched.ef_enabled)
+                and gplan.shard_size % store.block):
             raise ValueError(
                 f"group {name}: planner mode {planner!r} produced shard "
                 f"size {gplan.shard_size} not aligned to quant block "
-                f"{store.block}; q8_block needs the ragged planner's align "
-                f"guarantee")
+                f"{store.block}; quantized stores and the q8_block reduce "
+                f"wire need the ragged planner's align guarantee")
         entries[name] = GroupPlanEntry(
             name=name, tag=info.tag, policy=pol, local_specs=local_specs,
             plan=gplan, fsdp_axes=fsdp_axes,

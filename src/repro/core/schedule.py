@@ -60,7 +60,22 @@ surface of production FSDP:
                           it also pins the accumulate dtype of the *replica*
                           gradient psums (HSDP cross-pod, TP-replicated
                           groups, unsharded groups) in
-                          ``FSDPRuntime._reduce_grads``.
+                          ``FSDPRuntime._reduce_grads``.  Legacy spelling:
+                          it lowers bitwise-neutrally onto ``reduce_wire``
+                          (a cast codec of the same dtype).
+  * ``reduce_wire``    -- wire *format* of the gradient reduce-scatter
+                          (core.wire.WireCodec): None (default) derives a
+                          cast codec from ``reduce_dtype``/the gather wire
+                          dtype -- the legacy path, bit for bit --
+                          "fp32"/"bf16" name that cast codec explicitly,
+                          and "q8_block" is the QSDP-style quantized
+                          gradient wire: each device encodes its (error-
+                          feedback-compensated) cotangent as int8 codes +
+                          per-block scales (~4x fewer bytes than fp32),
+                          destinations dequantize and accumulate in fp32.
+                          Requires a sharded group; per-shard error-
+                          feedback residuals ride the ParamStore state
+                          tree (see core.store / DESIGN.md §Wire formats).
   * ``reduce_mode``    -- "match" (default): the gradient reduce-scatter
                           mirrors the gather mode (psum_scatter for xla, the
                           order-exact ring for ring) and stays bitwise
@@ -103,12 +118,16 @@ keeps the small globals group unsharded and fp32-reduces only the layer
 stack.  Scan *structure* knobs (prefetch / reshard / keep_last) always come
 from the base schedule; overrides affect how each group's buffer is moved.
 
-``sharded_gather`` is the one primitive the runtime gathers parameters
-through: forward = cast-to-wire + all-gather (xla or ring), backward =
-cast-to-reduce + reduce-scatter (the ZeRO-3 gradient reduce-scatter).  With
-default dtypes its VJP is op-for-op the autodiff transpose of the seed's
-``astype(bf16); all_gather``, so the default schedule is bitwise identical
-to the pre-schedule runtime, and ring mode is bitwise identical to xla mode.
+The wire *primitives* (codec gathers, ring collectives, the quantized
+reduce-scatter) live in ``core.wire``; this module owns the policy surface
+and resolves its knobs into ``WireCodec``s (``gather_codec``/
+``reduce_codec``).  ``sharded_gather`` -- re-exported from core.wire -- is
+the legacy dtype-level spelling: forward = cast-to-wire + all-gather (xla
+or ring), backward = cast-to-reduce + reduce-scatter (the ZeRO-3 gradient
+reduce-scatter).  With default dtypes its VJP is op-for-op the autodiff
+transpose of the seed's ``astype(bf16); all_gather``, so the default
+schedule is bitwise identical to the pre-schedule runtime, and ring mode is
+bitwise identical to xla mode.
 
 Validation happens in two stages: ``__post_init__`` checks dtype *names*
 and the gather mode at construction, and ``validate_for(compute_dtype)``
@@ -120,30 +139,31 @@ trace.
 from __future__ import annotations
 
 import dataclasses
-import math
 from collections.abc import Mapping
-from functools import partial
 
-import jax
 import jax.numpy as jnp
-from jax import lax
 
+from .wire import (CAST_FORMATS, STORE_FORMATS, WIRE_FORMATS, WireCodec,
+                   check_wire_format, codec_gather, codec_gather_ef,
+                   codec_grad_proxy, codec_grad_proxy_ef,
+                   codec_reduce_scatter, fmt_of_dtype, payload_all_gather,
+                   sharded_gather)
+
+# cast-dtype aliases the legacy gather_dtype/reduce_dtype knobs accept;
+# float8 entries appear only when the installed JAX provides them
+# (compat.float8_dtypes via core.wire.CAST_FORMATS)
 _DTYPES = {
     "bf16": jnp.bfloat16,
     "bfloat16": jnp.bfloat16,
     "fp32": jnp.float32,
     "f32": jnp.float32,
     "float32": jnp.float32,
+    **{name: dt for name, dt in CAST_FORMATS.items()
+       if name.startswith("fp8_")},
 }
 
 _GATHER_MODES = ("xla", "ring")
 _REDUCE_MODES = ("match", "ring_acc")
-
-# Storage formats a group's sharded buffer can take (core.store.ParamStore).
-# Defined here (not in store.py) because the format is a schedule knob --
-# validated by CommSchedule -- and store.py imports this module's gather
-# primitives, so the dependency must point this way.
-STORE_FORMATS = ("fp32", "bf16", "q8_block")
 
 # Per-group schedule override surface (ParallelConfig.group_schedules /
 # FSDPRuntime(group_schedules=...)).  Scan-structure knobs are deliberately
@@ -152,7 +172,7 @@ STORE_FORMATS = ("fp32", "bf16", "q8_block")
 # schedule.
 GROUP_OVERRIDE_KEYS = frozenset(
     {"gather_mode", "gather_dtype", "reduce_dtype", "sharded",
-     "reduce_mode", "param_store"})
+     "reduce_mode", "param_store", "reduce_wire"})
 
 
 def _check_name(name: str | None) -> None:
@@ -203,6 +223,7 @@ class CommSchedule:
     gather_mode: str = "xla"
     reduce_mode: str = "match"
     param_store: str = "fp32"
+    reduce_wire: str | None = None
     sharded: bool = True
 
     def __post_init__(self):
@@ -210,6 +231,12 @@ class CommSchedule:
         # against the real compute dtype by validate_for (runtime init)
         _check_name(self.gather_dtype)
         _check_name(self.reduce_dtype)
+        check_wire_format(self.reduce_wire, "reduce_wire")
+        if self.reduce_wire is not None and self.reduce_dtype is not None:
+            raise ValueError(
+                f"pass either reduce_wire ({self.reduce_wire!r}) or the "
+                f"legacy reduce_dtype ({self.reduce_dtype!r}), not both: "
+                f"reduce_dtype lowers onto a cast reduce_wire")
         if self.gather_mode not in _GATHER_MODES:
             raise ValueError(
                 f"unknown gather_mode {self.gather_mode!r}; expected one of "
@@ -242,20 +269,51 @@ class CommSchedule:
             gather_mode=par.gather_mode,
             reduce_mode=par.reduce_mode,
             param_store=par.param_store,
+            reduce_wire=par.reduce_wire,
         )
 
     def wire_dtype(self, compute_dtype) -> jnp.dtype:
         return _resolve(self.gather_dtype, compute_dtype)
 
     def accum_dtype(self, compute_dtype) -> jnp.dtype:
+        """Accumulate dtype of gradient reductions (the reduce-scatter's
+        cast codec, and the replica psums in ``_reduce_grads``).  A
+        quantized reduce wire accumulates dequantized contributions in
+        fp32; cast reduce wires ARE the accum dtype; otherwise the legacy
+        reduce_dtype-falls-back-to-wire-dtype rule applies unchanged."""
+        if self.reduce_wire == "q8_block":
+            return jnp.dtype(jnp.float32)
+        if self.reduce_wire is not None:
+            return jnp.dtype(CAST_FORMATS[self.reduce_wire])
         return _resolve(self.reduce_dtype, self.wire_dtype(compute_dtype))
+
+    # ---- resolved WireCodecs (core.wire) --------------------------------- #
+    def gather_codec(self, compute_dtype) -> WireCodec:
+        """Cast codec of the parameter all-gather for flat (non-quantized)
+        stores; quantized stores pre-encode their payload in the state
+        tree and bypass this (core.store)."""
+        return WireCodec(fmt_of_dtype(self.wire_dtype(compute_dtype)))
+
+    def reduce_codec(self, compute_dtype, block: int = 1024) -> WireCodec:
+        """The gradient reduce-scatter's WireCodec: ``reduce_wire`` when
+        set (``block`` sizes the q8 payload -- the group's quant block),
+        else a cast codec of the legacy accum dtype, bit for bit."""
+        if self.reduce_wire is not None:
+            return WireCodec(self.reduce_wire, block)
+        return WireCodec(fmt_of_dtype(self.accum_dtype(compute_dtype)))
+
+    @property
+    def ef_enabled(self) -> bool:
+        """Quantized reduce wires always run QSDP-style error feedback:
+        the residual state exists iff the reduce codec is lossy."""
+        return self.reduce_wire == "q8_block"
 
     def validate_for(self, compute_dtype) -> None:
         """Resolve the full wire/accum dtype path against the *actual*
         compute dtype and reject unsupported results.  A ``None``
         gather_dtype inherits the compute dtype, so e.g. fp16 compute must
         fail here (at runtime construction), not at first trace."""
-        supported = set(_DTYPES.values())
+        supported = {jnp.dtype(v).type for v in _DTYPES.values()}
         for role, dt in (("gather", self.wire_dtype(compute_dtype)),
                          ("reduce", self.accum_dtype(compute_dtype))):
             if dt.type not in supported:
@@ -268,6 +326,12 @@ class CommSchedule:
                 "param_store='q8_block' fixes the all-gather payload (int8 "
                 "codes + fp32 scales); gather_dtype must stay None, got "
                 f"{self.gather_dtype!r}")
+        if self.reduce_wire == "q8_block" and not self.sharded:
+            raise ValueError(
+                "reduce_wire='q8_block' quantizes the gradient "
+                "reduce-scatter; a schedule-unsharded (replicated) group "
+                "has no reduce-scatter to quantize -- its grads are "
+                "psum'd in full precision")
 
     def plan_layers(self, n_layers: int, remat: bool = True) -> LayerPlan:
         """Resolve the scan structure for an ``n_layers`` stack (see
@@ -290,7 +354,7 @@ class CommSchedule:
                 f"rmode={self.reduce_mode} "
                 f"store={self.param_store} "
                 f"gather={self.gather_dtype or 'compute'} "
-                f"reduce={self.reduce_dtype or 'wire'}")
+                f"reduce={self.reduce_wire or self.reduce_dtype or 'wire'}")
 
 
 def resolve_group_schedules(base: CommSchedule, overrides) -> dict:
@@ -310,7 +374,16 @@ def resolve_group_schedules(base: CommSchedule, overrides) -> dict:
             raise ValueError(
                 f"group_schedules[{name!r}]: unknown override keys "
                 f"{sorted(bad)}; allowed: {sorted(GROUP_OVERRIDE_KEYS)}")
-        out[name] = dataclasses.replace(base, **dict(ov))
+        ov = dict(ov)
+        # reduce_dtype and reduce_wire are two spellings of one knob: an
+        # override that sets one displaces whatever the base set for the
+        # other (only setting both in the SAME override is the user error
+        # the CommSchedule validator rejects)
+        if "reduce_wire" in ov and "reduce_dtype" not in ov:
+            ov["reduce_dtype"] = None
+        elif "reduce_dtype" in ov and "reduce_wire" not in ov:
+            ov["reduce_wire"] = None
+        out[name] = dataclasses.replace(base, **ov)
     return out
 
 
@@ -333,218 +406,38 @@ VARIANTS: dict[str, CommSchedule] = {
 }
 
 # Variants that change *numerics*, not just the comm path: ring_acc reduces
-# in ring order (allclose to, not bitwise with, XLA's linear order) and the
-# quantized store trains on block-dequantized weights.  Kept out of VARIANTS
-# so the bitwise parity suite stays honest; benchmarks and their own parity
-# tests (allclose / self-consistency) iterate these separately.
+# in ring order (allclose to, not bitwise with, XLA's linear order), the
+# quantized store trains on block-dequantized weights, and the quantized
+# reduce wire trains on block-quantized (error-compensated) gradients.
+# Kept out of VARIANTS so the bitwise parity suite stays honest; benchmarks
+# and their own parity tests (allclose / self-consistency) iterate these
+# separately.
 APPROX_VARIANTS: dict[str, CommSchedule] = {
     "ring_acc": CommSchedule(gather_mode="ring", reduce_mode="ring_acc",
                              reduce_dtype="fp32"),
     "q8_store": CommSchedule(param_store="q8_block"),
     "q8_ring_prefetch": CommSchedule(param_store="q8_block",
                                      gather_mode="ring", prefetch=True),
+    "q8_reduce": CommSchedule(reduce_wire="q8_block"),
+    "q8_both_wires": CommSchedule(param_store="q8_block",
+                                  reduce_wire="q8_block"),
+    "q8_reduce_ring_acc": CommSchedule(gather_mode="ring",
+                                       reduce_mode="ring_acc",
+                                       reduce_wire="q8_block"),
 }
 
 
 # --------------------------------------------------------------------------- #
-# manual ring collectives (gather_mode="ring")
+# wire primitives -- re-exported from core.wire, where they now live.
+# ``sharded_gather`` keeps the legacy dtype-level signature (a thin lowering
+# onto cast WireCodecs); new code should resolve codecs via
+# ``CommSchedule.gather_codec``/``reduce_codec`` and call the codec
+# primitives directly.
 # --------------------------------------------------------------------------- #
-def _ring_axis(axes: tuple[str, ...]):
-    # ppermute/axis_index treat a tuple of mesh axes as one flattened ring
-    # in axis-major order -- the same order lax.all_gather tiles over
-    return axes if len(axes) != 1 else axes[0]
-
-
-def _ring_all_gather(x, axes: tuple[str, ...], axis_sizes: tuple[int, ...]):
-    """Chunked ring all-gather over the flattened ``axes`` group: n-1
-    ``ppermute`` hops, each forwarding one shard-sized chunk, written into
-    the tiled output at absolute device offsets.  Pure data movement, so
-    bitwise identical to ``lax.all_gather(..., tiled=True)``."""
-    n = math.prod(axis_sizes)
-    if n == 1:
-        return x
-    ax = _ring_axis(axes)
-    idx = lax.axis_index(ax)
-    perm = [((i + 1) % n, i) for i in range(n)]  # receive from the right
-    c = x.shape[0]
-    out = jnp.zeros((n * c,) + x.shape[1:], x.dtype)
-    cur = x
-    out = lax.dynamic_update_slice_in_dim(out, cur, idx * c, axis=0)
-    for k in range(1, n):
-        cur = lax.ppermute(cur, ax, perm)  # now holds device (idx+k)'s shard
-        out = lax.dynamic_update_slice_in_dim(
-            out, cur, ((idx + k) % n) * c, axis=0)
-    return out
-
-
-def _ring_reduce_scatter(ct, axes: tuple[str, ...],
-                         axis_sizes: tuple[int, ...]):
-    """Ring reduce-scatter matching ``lax.psum_scatter`` bitwise.
-
-    Chunks are routed *un-reduced* to their destination device -- each hop
-    the in-flight buffer sheds the chunk that just arrived home, so hop k
-    carries n-1-k chunks -- and the destination accumulates its n
-    contributions in absolute device order, upcast to fp32, rounding to the
-    reduce dtype once.  That is exactly the (deterministic, linear-order,
-    fp32-accumulate) reduction XLA's CPU all-reduce family performs, which
-    is what makes ring mode bitwise identical to xla mode.  Wire volume is
-    sum(n-1-k) = n(n-1)/2 chunks vs the accumulate-in-flight ring's n-1:
-    the cost of order-exactness, acceptable at repro scale and documented
-    for paper scale."""
-    n = math.prod(axis_sizes)
-    if n == 1:
-        return ct
-    ax = _ring_axis(axes)
-    idx = lax.axis_index(ax)
-    perm = [((i + 1) % n, i) for i in range(n)]  # receive from the right
-    c = ct.shape[0] // n
-    chunks = ct.reshape((n, c) + ct.shape[1:])
-    # pre-rotate so row j holds this device's contribution to device idx+j:
-    # every harvest below is then a *static* slice (the last row)
-    chunks = jnp.roll(chunks, -idx, axis=0)
-    parts = [chunks[0]]          # own contribution to own chunk
-    buf = chunks[1:]
-    for _ in range(n - 1):
-        buf = lax.ppermute(buf, ax, perm)
-        parts.append(buf[-1])    # device (idx+k)'s contribution, now home
-        buf = buf[:-1]
-    # parts[k] came from device (idx+k) % n; reduce in absolute device
-    # order 0..n-1 in fp32, round once (== XLA's reduction order)
-    stack = jnp.stack(parts)
-    ordered = jnp.take(stack, (jnp.arange(n) - idx) % n, axis=0)
-    total = ordered[0].astype(jnp.float32)
-    for j in range(1, n):
-        total = total + ordered[j].astype(jnp.float32)
-    return total.astype(ct.dtype)
-
-
-def _ring_acc_reduce_scatter(ct, axes: tuple[str, ...],
-                             axis_sizes: tuple[int, ...]):
-    """Accumulate-in-flight ring reduce-scatter (reduce_mode="ring_acc").
-
-    One partial sum per destination chunk rides the ring: the chain for
-    device ``d`` starts at ``d-1`` and every hop adds the local
-    contribution, so the wire carries n-1 chunk-hops total -- the bandwidth-
-    optimal ring -- vs the order-exact ring's n(n-1)/2 un-reduced chunks.
-    The accumulation order is ring order (d-1, d-2, ..., d+1, d), NOT XLA's
-    absolute device order, and it runs in the dtype ``ct`` arrives in (the
-    schedule's reduce dtype): results are allclose to, but not bitwise
-    reproducible against, the match-mode reduce-scatter."""
-    n = math.prod(axis_sizes)
-    if n == 1:
-        return ct
-    ax = _ring_axis(axes)
-    idx = lax.axis_index(ax)
-    perm = [((i + 1) % n, i) for i in range(n)]  # receive from the right
-    c = ct.shape[0] // n
-    chunks = ct.reshape((n, c) + ct.shape[1:])
-    # pre-rotate so row j holds this device's contribution to device idx+j:
-    # every add below is then a *static* row index
-    chunks = jnp.roll(chunks, -idx, axis=0)
-    acc = chunks[1 % n]  # chain I initiate, destined for device idx+1
-    for k in range(2, n + 1):
-        # receive the partial destined for idx+k, add my contribution;
-        # k == n wraps to row 0 (my own chunk, last to be added)
-        acc = lax.ppermute(acc, ax, perm)
-        acc = acc + chunks[k % n]
-    return acc
-
-
-# --------------------------------------------------------------------------- #
-# the gather/reduce-scatter primitive
-# --------------------------------------------------------------------------- #
-def _reduce_scatter(g, axes, axis_sizes, mode, reduce_mode):
-    """The gradient reduce-scatter all stores share: accumulate-in-flight
-    ring when reduce_mode says so, else the gather mode's bitwise-exact
-    match (psum_scatter for xla, the order-exact ring for ring)."""
-    if not axes:
-        return g
-    if reduce_mode == "ring_acc":
-        return _ring_acc_reduce_scatter(g, axes, axis_sizes)
-    if mode == "ring":
-        return _ring_reduce_scatter(g, axes, axis_sizes)
-    return lax.psum_scatter(g, axes, scatter_dimension=0, tiled=True)
-
-
-@partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4, 5, 6, 7, 8))
-def sharded_gather(x, axes, axis_sizes, wire_dtype, reduce_dtype, out_dtype,
-                   param_dtype, mode, reduce_mode):
-    """All-gather ``x`` (a device-local flat buffer slice, leading axis
-    tiled) over the FSDP mesh ``axes`` (sizes ``axis_sizes``).
-
-    forward:  cast to ``wire_dtype`` -> all-gather (xla collective or
-              explicit ppermute ring, per ``mode``) -> cast to ``out_dtype``
-    backward: cast cotangent to ``reduce_dtype`` -> reduce-scatter (the
-              ZeRO-3 gradient reduce-scatter; psum_scatter, the matching
-              ring, or the accumulate-in-flight ring per ``reduce_mode``)
-              -> cast to ``param_dtype``
-    """
-    y = x.astype(wire_dtype)
-    if axes:
-        y = (_ring_all_gather(y, axes, axis_sizes) if mode == "ring"
-             else lax.all_gather(y, axes, tiled=True))
-    return y.astype(out_dtype)
-
-
-def _gather_fwd(x, axes, axis_sizes, wire_dtype, reduce_dtype, out_dtype,
-                param_dtype, mode, reduce_mode):
-    return (
-        sharded_gather(x, axes, axis_sizes, wire_dtype, reduce_dtype,
-                       out_dtype, param_dtype, mode, reduce_mode),
-        None,
-    )
-
-
-def _gather_bwd(axes, axis_sizes, wire_dtype, reduce_dtype, out_dtype,
-                param_dtype, mode, reduce_mode, _res, ct):
-    g = _reduce_scatter(ct.astype(reduce_dtype), axes, axis_sizes, mode,
-                        reduce_mode)
-    return (g.astype(param_dtype),)
-
-
-sharded_gather.defvjp(_gather_fwd, _gather_bwd)
-
-
-# --------------------------------------------------------------------------- #
-# store-payload primitives (quantized-wire gathers, core.store.ParamStore)
-# --------------------------------------------------------------------------- #
-def payload_all_gather(x, axes, axis_sizes, mode):
-    """Pure data-movement all-gather for non-differentiable store payloads
-    (int8 codes, per-block scales): gathered in ``x``'s own dtype, no VJP --
-    gradients for a quantized store flow through ``gather_grad_proxy``
-    instead (straight-through to the master shard)."""
-    x = lax.stop_gradient(x)
-    if not axes:
-        return x
-    return (_ring_all_gather(x, axes, axis_sizes) if mode == "ring"
-            else lax.all_gather(x, axes, tiled=True))
-
-
-@partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4, 5, 6, 7))
-def gather_grad_proxy(x, axes, axis_sizes, reduce_dtype, out_dtype,
-                      param_dtype, mode, reduce_mode):
-    """Straight-through gradient route for quantized stores.
-
-    forward: zeros of the gathered shape (no collective, no wire bytes) --
-    added to the dequantized payload so the gathered weights' value comes
-    from the codes while the gradient flows here.  backward: the standard
-    ZeRO-3 reduce-scatter of the cotangent to ``param_dtype`` (the master
-    shard's dtype), exactly as ``sharded_gather``'s backward."""
-    n = math.prod(axis_sizes) if axes else 1
-    return jnp.zeros((n * x.shape[0],) + x.shape[1:], out_dtype)
-
-
-def _proxy_fwd(x, axes, axis_sizes, reduce_dtype, out_dtype, param_dtype,
-               mode, reduce_mode):
-    return (gather_grad_proxy(x, axes, axis_sizes, reduce_dtype, out_dtype,
-                              param_dtype, mode, reduce_mode), None)
-
-
-def _proxy_bwd(axes, axis_sizes, reduce_dtype, out_dtype, param_dtype, mode,
-               reduce_mode, _res, ct):
-    g = _reduce_scatter(ct.astype(reduce_dtype), axes, axis_sizes, mode,
-                        reduce_mode)
-    return (g.astype(param_dtype),)
-
-
-gather_grad_proxy.defvjp(_proxy_fwd, _proxy_bwd)
+__all__ = [
+    "CommSchedule", "LayerPlan", "VARIANTS", "APPROX_VARIANTS",
+    "GROUP_OVERRIDE_KEYS", "STORE_FORMATS", "WIRE_FORMATS", "WireCodec",
+    "resolve_group_schedules", "sharded_gather", "payload_all_gather",
+    "codec_gather", "codec_gather_ef", "codec_grad_proxy",
+    "codec_grad_proxy_ef", "codec_reduce_scatter",
+]

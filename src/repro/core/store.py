@@ -12,7 +12,7 @@ transformation rather than ad-hoc branches):
   * ``fp32``      -- one fp32 flat buffer; master weights == stored weights.
                      Every path is bitwise identical to the pre-store
                      runtime (``master_f32``/``rebuild`` are identity and
-                     ``gather`` is exactly ``sharded_gather``).
+                     ``gather`` is exactly the cast-codec ``codec_gather``).
   * ``bf16``      -- one bf16 flat buffer (half the parameter memory, bf16
                      native on the wire).  The optimizer computes in fp32
                      and rounds the result back to bf16.
@@ -23,7 +23,7 @@ transformation rather than ad-hoc branches):
                      weights travel, fp32 masters stay sharded).  The
                      all-gather moves codes + scales (~4x fewer wire bytes
                      than fp32) and dequantizes locally; gradients take the
-                     straight-through route (``gather_grad_proxy``) and
+                     straight-through route (``codec_grad_proxy``) and
                      reduce-scatter onto the fp32 master, which the
                      optimizer updates and requantizes in the same fused
                      pass.  The planner's ``align`` guarantee (tensor starts
@@ -32,16 +32,29 @@ transformation rather than ad-hoc branches):
                      block ever straddles a device boundary.
 
 A store *state* is what ``params[name]`` holds for one group: a bare array
-for flat formats, a dict of arrays for ``q8_block``.  The runtime never
-inspects the format outside this module -- it asks the store to split the
-state into the differentiable part (``trainable``: the master/storage
-buffer, whose grads the optimizer consumes) and the non-differentiable rest
-(``frozen``: codes/scales), to gather a compute-dtype flat buffer, and to
-rebuild a state from updated fp32 master values.
+for flat formats, a dict of arrays otherwise.  The runtime never inspects
+the format outside this module -- it asks the store to split the state into
+the differentiable part (``trainable``: the master/storage buffer the
+optimizer's grads target, plus the reduce-wire error-feedback residual when
+one exists) and the non-differentiable rest (``frozen``: codes/scales), to
+gather a compute-dtype flat buffer, and to rebuild a state from updated
+fp32 master values.
+
+Quantized *gradient* wire (``CommSchedule.reduce_wire="q8_block"``, the
+QSDP direction): the per-device error-feedback residual lives in the state
+tree as a ``"reduce_ef"`` leaf, fp32, sized like the device's local
+gradient contribution -- the *gathered* buffer, i.e. ``ef_m`` (= the FSDP
+world size m) times the shard (sender-side EF memory == local gradient
+size, as in QSDP/1-bit Adam).  ``gather`` threads it into the EF variants
+of the wire primitives, whose VJP hands back ``(grad, new_residual)``; the
+runtime splits the residual out of the grad tree before loss scaling and
+re-attaches it to the updated state (``attach_ef``), so it checkpoints and
+restores alongside the weights and optimizer state.
 
 The format is selected by ``CommSchedule.param_store`` (global default via
 ``ParallelConfig.param_store``, per-group via ``group_schedules``) and
-validated by ``CommSchedule.validate_for``; see DESIGN.md §ParamStore.
+validated by ``CommSchedule.validate_for``; see DESIGN.md §ParamStore and
+§Wire formats.
 """
 from __future__ import annotations
 
@@ -51,21 +64,33 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..quant.blockwise import dequantize_blockwise, quantize_blockwise
-from .schedule import (STORE_FORMATS, CommSchedule, gather_grad_proxy,
-                       payload_all_gather, sharded_gather)
+from ..quant.blockwise import quantize_blockwise
+from .schedule import CommSchedule
+from .wire import (STORE_FORMATS, WireCodec, codec_gather, codec_gather_ef,
+                   codec_grad_proxy, codec_grad_proxy_ef, payload_all_gather)
 
 # q8_block state keys, in tree-sorted order (dict iteration order of the
-# states the store builds; checkpoints rely on the names, not the order)
+# states the store builds; checkpoints rely on the names, not the order).
+# An EF-carrying state appends "reduce_ef" (see ``state_keys``).
 Q8_KEYS = ("codes", "master", "scales")
+
+# the reduce-wire error-feedback residual leaf (fp32, contribution-sized)
+EF_KEY = "reduce_ef"
 
 
 @dataclasses.dataclass(frozen=True)
 class ParamStore:
-    """Storage-format policy for one communication group's buffer."""
+    """Storage-format policy for one communication group's buffer.
+
+    ``ef_m`` > 0 adds the quantized-reduce-wire error-feedback residual to
+    the state: ``ef_m`` is the group's FSDP world size m (the residual is
+    m shards long -- the local gradient contribution); 0 means no residual
+    leaf (every pre-reduce-wire configuration, bit for bit).
+    """
 
     fmt: str = "fp32"
     block: int = 1024  # quant block (flat elements) for q8_block
+    ef_m: int = 0      # reduce-wire EF residual chunks (0 = no residual)
 
     def __post_init__(self):
         if self.fmt not in STORE_FORMATS:
@@ -74,6 +99,8 @@ class ParamStore:
                 f"{list(STORE_FORMATS)}")
         if self.block < 1:
             raise ValueError(f"quant block must be >= 1, got {self.block}")
+        if self.ef_m < 0:
+            raise ValueError(f"ef_m must be >= 0, got {self.ef_m}")
 
     # ------------------------------------------------------------------ #
     # format properties
@@ -83,6 +110,10 @@ class ParamStore:
         return self.fmt == "q8_block"
 
     @property
+    def has_ef(self) -> bool:
+        return self.ef_m > 0
+
+    @property
     def storage_dtype(self) -> jnp.dtype:
         """Dtype of the differentiable (trainable) buffer."""
         return jnp.dtype(jnp.bfloat16 if self.fmt == "bf16" else jnp.float32)
@@ -90,8 +121,27 @@ class ParamStore:
     def align(self) -> int:
         """Planner alignment this store needs: quantized stores pin tensor
         starts and the shard size to the quant block so fixed tiles over the
-        local shard never straddle a tensor start or a device boundary."""
-        return self.block if self.quantized else 1
+        local shard never straddle a tensor start or a device boundary.
+        A quantized reduce wire (``ef_m`` set by the planner iff
+        reduce_wire="q8_block") needs the same guarantee: reduce-scatter
+        chunks are shard-sized, so S must be a multiple of the block."""
+        return self.block if (self.quantized or self.has_ef) else 1
+
+    def state_keys(self) -> tuple[str, ...] | None:
+        """Leaf names of a dict state (None = the state is a bare array:
+        flat formats without an EF residual, the seed's format)."""
+        keys = Q8_KEYS if self.quantized else (
+            ("master",) if self.has_ef else None)
+        if keys is None:
+            return None
+        return keys + ((EF_KEY,) if self.has_ef else ())
+
+    def leaf_dtype(self, key: str) -> jnp.dtype:
+        return jnp.dtype({
+            "codes": jnp.int8, "master": self.storage_dtype
+            if not self.quantized else jnp.dtype(jnp.float32),
+            "scales": jnp.float32, EF_KEY: jnp.float32,
+        }[key])
 
     # ------------------------------------------------------------------ #
     # state structure
@@ -103,58 +153,89 @@ class ParamStore:
                 f"{self.block} -- planner align missing?")
         return shape[:-1] + (shape[-1] // self.block,)
 
+    def _ef_shape(self, shape: tuple[int, ...]) -> tuple[int, ...]:
+        """Global EF-residual shape for a global buffer ``shape``: the last
+        dim scales by ``ef_m`` so each device's local slice is one full
+        gathered buffer (its reduce-scatter contribution)."""
+        return shape[:-1] + (shape[-1] * self.ef_m,)
+
+    def _leaf_shape(self, key: str, shape: tuple[int, ...]):
+        if key == "scales":
+            return self._scales_shape(shape)
+        if key == EF_KEY:
+            return self._ef_shape(shape)
+        return shape
+
     def state_struct(self, shape: tuple[int, ...], sharding):
         """ShapeDtypeStruct tree of one group's param state (``sharding``
-        applies to every leaf: scales shard evenly because S % block == 0)."""
-        def sds(shp, dt):
-            return jax.ShapeDtypeStruct(shp, dt, sharding=sharding)
-
-        if not self.quantized:
-            return sds(shape, self.storage_dtype)
-        return {
-            "codes": sds(shape, jnp.int8),
-            "master": sds(shape, jnp.float32),
-            "scales": sds(self._scales_shape(shape), jnp.float32),
-        }
+        applies to every leaf: scales and the EF residual shard evenly
+        because S % block == 0 and the residual is m shard-lengths)."""
+        keys = self.state_keys()
+        if keys is None:
+            return jax.ShapeDtypeStruct(shape, self.storage_dtype,
+                                        sharding=sharding)
+        return {k: jax.ShapeDtypeStruct(self._leaf_shape(k, shape),
+                                        self.leaf_dtype(k), sharding=sharding)
+                for k in keys}
 
     def state_pspecs(self, pspec):
         """PartitionSpec tree matching ``state_struct`` (all leaves shard
         identically along the flat buffer axis)."""
-        if not self.quantized:
+        keys = self.state_keys()
+        if keys is None:
             return pspec
-        return {k: pspec for k in Q8_KEYS}
+        return {k: pspec for k in keys}
 
     # ------------------------------------------------------------------ #
     # host-side construction (init / checkpoint restore)
     # ------------------------------------------------------------------ #
     def create(self, master_f32: np.ndarray):
-        """Build a state from a host-side fp32 global buffer."""
+        """Build a state from a host-side fp32 global buffer (EF residuals
+        start at zero: a fresh error-feedback history is always valid)."""
+        master_f32 = np.asarray(master_f32, np.float32)
         if self.fmt == "fp32":
-            return np.asarray(master_f32, np.float32)
-        if self.fmt == "bf16":
-            return np.asarray(jnp.asarray(master_f32).astype(jnp.bfloat16))
-        master = np.asarray(master_f32, np.float32)
-        codes, scales = quantize_blockwise(jnp.asarray(master), self.block)
-        return {"codes": np.asarray(codes), "master": master,
-                "scales": np.asarray(scales)}
+            state = master_f32
+        elif self.fmt == "bf16":
+            state = np.asarray(
+                jnp.asarray(master_f32).astype(jnp.bfloat16))
+        else:
+            codes, scales = quantize_blockwise(
+                jnp.asarray(master_f32), self.block)
+            state = {"codes": np.asarray(codes), "master": master_f32,
+                     "scales": np.asarray(scales)}
+        if not self.has_ef:
+            return state
+        ef = np.zeros(self._ef_shape(master_f32.shape), np.float32)
+        if not isinstance(state, dict):
+            state = {"master": state}
+        return {**state, EF_KEY: ef}
 
     # ------------------------------------------------------------------ #
     # traced views (inside shard_map, on device-local shards)
     # ------------------------------------------------------------------ #
     def trainable(self, state):
-        """The differentiable leaf: what ``jax.grad`` runs against and what
-        the gradient reduce-scatter targets (the master for q8_block)."""
+        """The differentiable leaves: the master/storage buffer ``jax.grad``
+        runs against (and the gradient reduce-scatter targets), plus the
+        reduce-wire EF residual when one exists (its "gradient" IS the
+        updated residual -- see core.wire's EF primitives)."""
+        if self.has_ef:
+            return {"master": state["master"], EF_KEY: state[EF_KEY]}
         return state["master"] if self.quantized else state
 
     def frozen(self, state):
         """The non-differentiable rest of the state (closed over by the
-        loss as constants); None for flat formats."""
+        loss as constants); None unless the store is quantized."""
         if not self.quantized:
             return None
         return {"codes": state["codes"], "scales": state["scales"]}
 
     def combine(self, trainable, frozen):
         """Inverse of (trainable, frozen): the full state again."""
+        if self.has_ef:
+            state = dict(trainable)
+            if self.quantized:
+                state.update(codes=frozen["codes"], scales=frozen["scales"])
+            return state
         if not self.quantized:
             return trainable
         return {"codes": frozen["codes"], "master": trainable,
@@ -163,20 +244,35 @@ class ParamStore:
     def master_f32(self, state) -> jax.Array:
         """fp32 view of the weights the optimizer updates.  For fp32 this is
         the state itself (no cast: bitwise-identical update graph)."""
-        if self.quantized:
-            return state["master"]
+        if isinstance(state, dict):
+            state = state["master"]
         return state if state.dtype == jnp.float32 else state.astype(
             jnp.float32)
 
     def rebuild(self, new_master_f32: jax.Array):
         """State from updated fp32 master values -- for q8_block this is the
-        requantize fused into the same optimizer pass."""
+        requantize fused into the same optimizer pass.  The EF residual is
+        NOT part of the rebuild (optimizers don't see it): the runtime
+        re-attaches the residual that came back through the grad tree via
+        ``attach_ef``."""
         if self.fmt == "fp32":
-            return new_master_f32
-        if self.fmt == "bf16":
-            return new_master_f32.astype(jnp.bfloat16)
-        codes, scales = quantize_blockwise(new_master_f32, self.block)
-        return {"codes": codes, "master": new_master_f32, "scales": scales}
+            core = new_master_f32
+        elif self.fmt == "bf16":
+            core = new_master_f32.astype(jnp.bfloat16)
+        else:
+            codes, scales = quantize_blockwise(new_master_f32, self.block)
+            return ({"codes": codes, "master": new_master_f32,
+                     "scales": scales})
+        return {"master": core} if self.has_ef else core
+
+    def attach_ef(self, core_state, new_ef):
+        """Re-attach the updated EF residual to a rebuilt state (the step
+        function's last move before returning new params)."""
+        if not self.has_ef:
+            raise ValueError("attach_ef on a store without an EF residual")
+        if not isinstance(core_state, dict):
+            core_state = {"master": core_state}
+        return {**core_state, EF_KEY: new_ef}
 
     # ------------------------------------------------------------------ #
     # the gather (what the schedule moves for this format)
@@ -185,25 +281,46 @@ class ParamStore:
                axis_sizes: tuple[int, ...], sched: CommSchedule,
                compute_dtype) -> jax.Array:
         """All-gather one device-local state into the flat compute-dtype
-        buffer the model unpacks.  Flat formats go through
-        ``sharded_gather`` (whose backward is the ZeRO-3 reduce-scatter);
-        q8_block gathers codes + scales (the quantized wire), dequantizes
-        locally, and routes gradients straight-through to the master shard
-        via ``gather_grad_proxy``."""
+        buffer the model unpacks, through the schedule's WireCodecs
+        (core.wire).  Flat formats go through ``codec_gather`` (whose
+        backward is the ZeRO-3 reduce-scatter in the reduce codec's
+        format); q8_block states are already wire-encoded, so their
+        codes + scales move through ``payload_all_gather``, are decoded
+        locally, and gradients route straight-through to the master shard
+        via ``codec_grad_proxy``.  When the reduce wire is quantized, the
+        EF residual is threaded through the ``*_ef`` variants and its
+        updated value returns through the grad tree."""
         cd = jnp.dtype(compute_dtype)
+        rcodec = sched.reduce_codec(cd, self.block)
+        ef = state[EF_KEY] if self.has_ef else None
         if not self.quantized:
-            return sharded_gather(
-                state, axes, axis_sizes, sched.wire_dtype(cd),
-                sched.accum_dtype(cd), cd, jnp.dtype(state.dtype),
-                sched.gather_mode, sched.reduce_mode)
-        codes = payload_all_gather(state["codes"], axes, axis_sizes,
-                                   sched.gather_mode)
-        scales = payload_all_gather(state["scales"], axes, axis_sizes,
-                                    sched.gather_mode)
-        deq = dequantize_blockwise(codes, scales, self.block).astype(cd)
-        return deq + gather_grad_proxy(
-            state["master"], axes, axis_sizes, sched.accum_dtype(cd), cd,
-            jnp.dtype(jnp.float32), sched.gather_mode, sched.reduce_mode)
+            flat = state["master"] if self.has_ef else state
+            gcodec = sched.gather_codec(cd)
+            pdt = jnp.dtype(flat.dtype)
+            if ef is None:
+                return codec_gather(flat, axes, axis_sizes, gcodec, rcodec,
+                                    cd, pdt, sched.gather_mode,
+                                    sched.reduce_mode)
+            return codec_gather_ef(flat, ef, axes, axis_sizes, gcodec,
+                                   rcodec, cd, pdt, sched.gather_mode,
+                                   sched.reduce_mode)
+        payload = {
+            "codes": payload_all_gather(state["codes"], axes, axis_sizes,
+                                        sched.gather_mode),
+            "scales": payload_all_gather(state["scales"], axes, axis_sizes,
+                                         sched.gather_mode),
+        }
+        deq = WireCodec("q8_block", self.block).decode(payload, cd)
+        f32 = jnp.dtype(jnp.float32)
+        if ef is None:
+            proxy = codec_grad_proxy(state["master"], axes, axis_sizes,
+                                     rcodec, cd, f32, sched.gather_mode,
+                                     sched.reduce_mode)
+        else:
+            proxy = codec_grad_proxy_ef(state["master"], ef, axes,
+                                        axis_sizes, rcodec, cd, f32,
+                                        sched.gather_mode, sched.reduce_mode)
+        return deq + proxy
 
     # ------------------------------------------------------------------ #
     # accounting
@@ -214,4 +331,4 @@ class ParamStore:
         ``bench_e2e --schedule`` reports)."""
         if not self.quantized:
             return n_elements * jnp.dtype(wire_dtype).itemsize
-        return n_elements + (n_elements // self.block) * 4  # codes + scales
+        return WireCodec("q8_block", self.block).wire_bytes(n_elements)

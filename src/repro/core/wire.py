@@ -1,0 +1,573 @@
+"""WireCodec: bidirectional wire formats for FSDP collectives.
+
+Before this layer existed the two directions of FSDP traffic were encoded
+by different machinery: the parameter all-gather had a structure-aware wire
+(ParamStore's q8_block codes+scales payload, ~4x fewer bytes than fp32)
+while the gradient reduce-scatter was a hard-coded dtype cast buried in the
+``sharded_gather`` VJP.  QSDP (Markov et al.) shows the *gradient*
+direction quantizes just as well -- with error feedback it converges at
+full-precision quality -- so the wire format deserves to be one
+abstraction, owned here, that both directions consume:
+
+  * ``WireCodec``  -- one payload format on the wire: ``encode`` (dense ->
+    payload), ``decode`` (payload -> dense), and the byte accounting.
+    Formats: ``fp32``/``bf16`` (cast codecs: the payload is the buffer
+    itself in that dtype, encode/decode are ``astype`` -- op-for-op what
+    the pre-codec runtime emitted, so these paths stay bitwise identical),
+    ``q8_block`` (block-wise INT8: payload is ``{"codes", "scales"}``,
+    1 B/element + 4 B per ``block`` elements), plus -- when the installed
+    JAX provides float8 (``compat.float8_dtypes``) -- ``fp8_e4m3``/
+    ``fp8_e5m2`` cast codecs, registered only when present so fp8 is a
+    legal wire dtype without any call-site version checks.
+  * gather direction -- ``codec_gather`` encodes, all-gathers the payload
+    (xla collective or explicit ppermute ring), and decodes locally.
+    ``payload_all_gather`` is the pure-data-movement primitive quantized
+    ParamStores feed their pre-encoded state through.
+  * reduce direction -- the VJP of the gathers.  Cast codecs reduce-scatter
+    exactly as before (psum_scatter / order-exact ring / accumulate-in-
+    flight ring per mode).  The ``q8_block`` reduce codec implements the
+    QSDP-style quantized gradient reduce-scatter: each device encodes its
+    (error-compensated) full cotangent once -- blocks never straddle chunk
+    boundaries because the planner aligns the shard size to the quant
+    block -- and the reduce-combine rule is *dequantize-then-accumulate in
+    fp32 in absolute device order* (match mode: quantized chunks are
+    routed un-reduced, so xla and ring gather modes stay bitwise identical
+    to each other) or the per-hop requantizing accumulate-in-flight ring
+    (``reduce_mode="ring_acc"``: n-1 quantized chunk-hops, partial sums
+    requantized each hop, allclose-not-bitwise).
+  * error feedback -- the ``*_ef`` primitives thread a per-device residual
+    through the VJP: backward adds the residual to the cotangent before
+    encoding, and returns the fresh quantization error ``comp -
+    decode(encode(comp))`` as the residual's "cotangent", so
+    ``jax.grad`` hands the updated residual back alongside the gradient
+    (the residual lives in the ParamStore state tree; see
+    ``core.store``).  This is QSDP/1-bit-Adam sender-side error feedback:
+    the residual is sized like the device's local gradient contribution.
+
+Layering: this module sits below ``core.schedule`` (which owns the
+*policy* -- CommSchedule's ``reduce_wire`` knob resolves to a WireCodec
+here) and ``core.store`` (which owns what the state tree holds).  It
+imports only ``quant.blockwise`` and ``compat``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..compat import float8_dtypes
+from ..quant.blockwise import dequantize_blockwise, quantize_blockwise
+
+# --------------------------------------------------------------------------- #
+# format registry
+# --------------------------------------------------------------------------- #
+
+# cast wire formats: the payload is the buffer itself in this dtype.
+# float8 entries appear only when the installed JAX provides them
+# (compat.float8_dtypes) -- the guarded-plumbing contract.
+CAST_FORMATS: dict[str, jnp.dtype] = {
+    "fp32": jnp.dtype(jnp.float32),
+    "bf16": jnp.dtype(jnp.bfloat16),
+    **float8_dtypes(),
+}
+
+# every format a WireCodec can take
+WIRE_FORMATS: tuple[str, ...] = tuple(CAST_FORMATS) + ("q8_block",)
+
+# storage formats a ParamStore can take (core.store).  fp8 stores are a
+# ROADMAP item gated on kernel support, so the store registry stays the
+# original three even where fp8 *wire* formats are available.
+STORE_FORMATS: tuple[str, ...] = ("fp32", "bf16", "q8_block")
+
+
+def check_wire_format(fmt: str | None, who: str = "wire") -> None:
+    if fmt is not None and fmt not in WIRE_FORMATS:
+        raise ValueError(
+            f"unknown {who} format {fmt!r}; expected one of "
+            f"{list(WIRE_FORMATS)}")
+
+
+def fmt_of_dtype(dtype) -> str:
+    """Canonical wire-format name of a cast dtype (the legacy
+    gather/reduce dtype knobs lower through this)."""
+    dt = jnp.dtype(dtype)
+    for name, cdt in CAST_FORMATS.items():
+        if cdt == dt:
+            return name
+    raise ValueError(
+        f"dtype {dt} has no wire format; supported: {list(CAST_FORMATS)}")
+
+
+@dataclasses.dataclass(frozen=True)
+class WireCodec:
+    """One payload format on the FSDP wire (either direction).
+
+    ``encode``/``decode`` are the only places payload structure is known:
+    cast codecs carry the buffer itself (payload == array), ``q8_block``
+    carries ``{"codes": int8, "scales": fp32-per-block}``.  The codec is a
+    frozen, hashable policy object, so it rides ``jax.custom_vjp``
+    nondiff args directly.
+    """
+
+    fmt: str = "fp32"
+    block: int = 1024  # quant block (flat elements) for q8_block
+
+    def __post_init__(self):
+        check_wire_format(self.fmt, "WireCodec")
+        if self.block < 1:
+            raise ValueError(f"quant block must be >= 1, got {self.block}")
+
+    @property
+    def quantized(self) -> bool:
+        return self.fmt == "q8_block"
+
+    @property
+    def dtype(self) -> jnp.dtype:
+        """Wire dtype of a cast codec (ValueError for quantized formats:
+        their payload has two dtypes and callers must not assume one)."""
+        if self.quantized:
+            raise ValueError("q8_block payload has no single wire dtype")
+        return CAST_FORMATS[self.fmt]
+
+    # ------------------------------------------------------------------ #
+    def encode(self, x: jax.Array):
+        """Dense buffer -> wire payload (array for cast codecs, a
+        codes/scales dict for q8_block; last dim must be a multiple of
+        ``block`` -- the planner's align guarantee)."""
+        if not self.quantized:
+            return x.astype(self.dtype)
+        codes, scales = quantize_blockwise(x, self.block)
+        return {"codes": codes, "scales": scales}
+
+    def decode(self, payload, out_dtype) -> jax.Array:
+        """Wire payload -> dense buffer in ``out_dtype``."""
+        if not self.quantized:
+            return payload.astype(out_dtype)
+        return dequantize_blockwise(
+            payload["codes"], payload["scales"], self.block).astype(out_dtype)
+
+    # ------------------------------------------------------------------ #
+    def wire_bytes(self, n_elements: int) -> int:
+        """PAYLOAD bytes of ``n_elements`` in this format -- the
+        per-moved-copy figure, before any route/volume factor.  Gather
+        routes all ship (m-1)/m of this uniformly, so gather accounting
+        uses it directly; reduce routes differ (order-exact chunk routing
+        is m/2 x the bandwidth-optimal rings), so the reduce-side
+        accounting (``GroupPlanEntry.reduce_wire_bytes``) applies that
+        multiplier on top."""
+        if not self.quantized:
+            return n_elements * self.dtype.itemsize
+        return n_elements + (n_elements // self.block) * 4  # codes + scales
+
+
+# --------------------------------------------------------------------------- #
+# manual ring collectives (gather_mode="ring")
+# --------------------------------------------------------------------------- #
+def _ring_axis(axes: tuple[str, ...]):
+    # ppermute/axis_index treat a tuple of mesh axes as one flattened ring
+    # in axis-major order -- the same order lax.all_gather tiles over
+    return axes if len(axes) != 1 else axes[0]
+
+
+def _ring_all_gather(x, axes: tuple[str, ...], axis_sizes: tuple[int, ...]):
+    """Chunked ring all-gather over the flattened ``axes`` group: n-1
+    ``ppermute`` hops, each forwarding one shard-sized chunk, written into
+    the tiled output at absolute device offsets.  Pure data movement, so
+    bitwise identical to ``lax.all_gather(..., tiled=True)``."""
+    n = math.prod(axis_sizes)
+    if n == 1:
+        return x
+    ax = _ring_axis(axes)
+    idx = lax.axis_index(ax)
+    perm = [((i + 1) % n, i) for i in range(n)]  # receive from the right
+    c = x.shape[0]
+    out = jnp.zeros((n * c,) + x.shape[1:], x.dtype)
+    cur = x
+    out = lax.dynamic_update_slice_in_dim(out, cur, idx * c, axis=0)
+    for k in range(1, n):
+        cur = lax.ppermute(cur, ax, perm)  # now holds device (idx+k)'s shard
+        out = lax.dynamic_update_slice_in_dim(
+            out, cur, ((idx + k) % n) * c, axis=0)
+    return out
+
+
+def _ring_reduce_scatter(ct, axes: tuple[str, ...],
+                         axis_sizes: tuple[int, ...]):
+    """Ring reduce-scatter matching ``lax.psum_scatter`` bitwise.
+
+    Chunks are routed *un-reduced* to their destination device -- each hop
+    the in-flight buffer sheds the chunk that just arrived home, so hop k
+    carries n-1-k chunks -- and the destination accumulates its n
+    contributions in absolute device order, upcast to fp32, rounding to the
+    reduce dtype once.  That is exactly the (deterministic, linear-order,
+    fp32-accumulate) reduction XLA's CPU all-reduce family performs, which
+    is what makes ring mode bitwise identical to xla mode.  Wire volume is
+    sum(n-1-k) = n(n-1)/2 chunks vs the accumulate-in-flight ring's n-1:
+    the cost of order-exactness, acceptable at repro scale and documented
+    for paper scale."""
+    n = math.prod(axis_sizes)
+    if n == 1:
+        return ct
+    ax = _ring_axis(axes)
+    idx = lax.axis_index(ax)
+    perm = [((i + 1) % n, i) for i in range(n)]  # receive from the right
+    c = ct.shape[0] // n
+    chunks = ct.reshape((n, c) + ct.shape[1:])
+    # pre-rotate so row j holds this device's contribution to device idx+j:
+    # every harvest below is then a *static* slice (the last row)
+    chunks = jnp.roll(chunks, -idx, axis=0)
+    parts = [chunks[0]]          # own contribution to own chunk
+    buf = chunks[1:]
+    for _ in range(n - 1):
+        buf = lax.ppermute(buf, ax, perm)
+        parts.append(buf[-1])    # device (idx+k)'s contribution, now home
+        buf = buf[:-1]
+    # parts[k] came from device (idx+k) % n; reduce in absolute device
+    # order 0..n-1 in fp32, round once (== XLA's reduction order)
+    stack = jnp.stack(parts)
+    ordered = jnp.take(stack, (jnp.arange(n) - idx) % n, axis=0)
+    total = ordered[0].astype(jnp.float32)
+    for j in range(1, n):
+        total = total + ordered[j].astype(jnp.float32)
+    return total.astype(ct.dtype)
+
+
+def _ring_acc_reduce_scatter(ct, axes: tuple[str, ...],
+                             axis_sizes: tuple[int, ...]):
+    """Accumulate-in-flight ring reduce-scatter (reduce_mode="ring_acc").
+
+    One partial sum per destination chunk rides the ring: the chain for
+    device ``d`` starts at ``d-1`` and every hop adds the local
+    contribution, so the wire carries n-1 chunk-hops total -- the bandwidth-
+    optimal ring -- vs the order-exact ring's n(n-1)/2 un-reduced chunks.
+    The accumulation order is ring order (d-1, d-2, ..., d+1, d), NOT XLA's
+    absolute device order, and it runs in the dtype ``ct`` arrives in (the
+    schedule's reduce dtype): results are allclose to, but not bitwise
+    reproducible against, the match-mode reduce-scatter."""
+    n = math.prod(axis_sizes)
+    if n == 1:
+        return ct
+    ax = _ring_axis(axes)
+    idx = lax.axis_index(ax)
+    perm = [((i + 1) % n, i) for i in range(n)]  # receive from the right
+    c = ct.shape[0] // n
+    chunks = ct.reshape((n, c) + ct.shape[1:])
+    # pre-rotate so row j holds this device's contribution to device idx+j:
+    # every add below is then a *static* row index
+    chunks = jnp.roll(chunks, -idx, axis=0)
+    acc = chunks[1 % n]  # chain I initiate, destined for device idx+1
+    for k in range(2, n + 1):
+        # receive the partial destined for idx+k, add my contribution;
+        # k == n wraps to row 0 (my own chunk, last to be added)
+        acc = lax.ppermute(acc, ax, perm)
+        acc = acc + chunks[k % n]
+    return acc
+
+
+# --------------------------------------------------------------------------- #
+# quantized reduce-scatter (the q8_block reduce-combine rules)
+# --------------------------------------------------------------------------- #
+def _q8_chunks(codes, scales, axes, axis_sizes, block):
+    """Split an encoded payload into per-destination chunk pairs, rotated
+    so row j is this device's contribution to device idx+j."""
+    n = math.prod(axis_sizes)
+    idx = lax.axis_index(_ring_axis(axes))
+    c = codes.shape[0] // n
+    if c % block:
+        raise ValueError(
+            f"reduce-scatter chunk size {c} not a multiple of quant block "
+            f"{block} -- planner align missing for the reduce wire?")
+    cch = jnp.roll(codes.reshape((n, c) + codes.shape[1:]), -idx, axis=0)
+    sch = jnp.roll(scales.reshape((n, c // block) + scales.shape[1:]),
+                   -idx, axis=0)
+    return n, idx, cch, sch
+
+
+def _q8_route_reduce_scatter(payload, block: int, axes: tuple[str, ...],
+                             axis_sizes: tuple[int, ...]) -> jax.Array:
+    """Order-exact quantized reduce-scatter (reduce_mode="match").
+
+    The mirror of ``_ring_reduce_scatter`` with an int8 payload: quantized
+    chunks (codes + per-block scales) are routed *un-reduced* to their
+    destination, which dequantizes its n contributions and accumulates
+    them in fp32 in absolute device order.  Because the payload is encoded
+    once at the source and the accumulation order is device order, this
+    path is bitwise identical for xla and ring gather modes (there is no
+    XLA collective that dequant-accumulates, so both modes route manually).
+    Returns the fp32 shard."""
+    codes, scales = payload["codes"], payload["scales"]
+    n = math.prod(axis_sizes)
+    if n == 1:
+        return dequantize_blockwise(codes, scales, block)
+    ax = _ring_axis(axes)
+    perm = [((i + 1) % n, i) for i in range(n)]
+    n, idx, cch, sch = _q8_chunks(codes, scales, axes, axis_sizes, block)
+    parts = [(cch[0], sch[0])]   # own contribution to own chunk
+    cbuf, sbuf = cch[1:], sch[1:]
+    for _ in range(n - 1):
+        cbuf = lax.ppermute(cbuf, ax, perm)
+        sbuf = lax.ppermute(sbuf, ax, perm)
+        parts.append((cbuf[-1], sbuf[-1]))  # from device idx+k, now home
+        cbuf, sbuf = cbuf[:-1], sbuf[:-1]
+    deq = jnp.stack([dequantize_blockwise(pc, ps, block)
+                     for pc, ps in parts])
+    # parts[k] came from device (idx+k) % n; fold in absolute device order
+    ordered = jnp.take(deq, (jnp.arange(n) - idx) % n, axis=0)
+    total = ordered[0]
+    for j in range(1, n):
+        total = total + ordered[j]
+    return total
+
+
+def _q8_ring_acc_reduce_scatter(payload, block: int, axes: tuple[str, ...],
+                                axis_sizes: tuple[int, ...]) -> jax.Array:
+    """Accumulate-in-flight quantized reduce-scatter
+    (reduce_mode="ring_acc"): the partial sum rides the ring *quantized*
+    (n-1 chunk-hops of codes + scales) and every hop dequantizes, adds the
+    local dequantized contribution, and requantizes.  The per-hop
+    requantization error of partial sums is NOT error-compensated (only
+    the one-time contribution encoding is, see ``codec_gather_ef``);
+    accumulation order is ring order -- allclose, not bitwise, vs the
+    match-mode rule.  Returns the fp32 shard."""
+    codes, scales = payload["codes"], payload["scales"]
+    n = math.prod(axis_sizes)
+    if n == 1:
+        return dequantize_blockwise(codes, scales, block)
+    ax = _ring_axis(axes)
+    perm = [((i + 1) % n, i) for i in range(n)]
+    n, idx, cch, sch = _q8_chunks(codes, scales, axes, axis_sizes, block)
+    acc_c, acc_s = cch[1 % n], sch[1 % n]  # chain I initiate, for idx+1
+    val = None
+    for k in range(2, n + 1):
+        acc_c = lax.ppermute(acc_c, ax, perm)
+        acc_s = lax.ppermute(acc_s, ax, perm)
+        val = (dequantize_blockwise(acc_c, acc_s, block)
+               + dequantize_blockwise(cch[k % n], sch[k % n], block))
+        if k < n:  # still in flight: requantize for the next hop
+            acc_c, acc_s = quantize_blockwise(val, block)
+    return val
+
+
+# --------------------------------------------------------------------------- #
+# the reduce-combine dispatch
+# --------------------------------------------------------------------------- #
+def dtype_reduce_scatter(g, axes, axis_sizes, mode, reduce_mode):
+    """The cast-codec gradient reduce-scatter: accumulate-in-flight ring
+    when reduce_mode says so, else the gather mode's bitwise-exact match
+    (psum_scatter for xla, the order-exact ring for ring)."""
+    if not axes:
+        return g
+    if reduce_mode == "ring_acc":
+        return _ring_acc_reduce_scatter(g, axes, axis_sizes)
+    if mode == "ring":
+        return _ring_reduce_scatter(g, axes, axis_sizes)
+    return lax.psum_scatter(g, axes, scatter_dimension=0, tiled=True)
+
+
+def codec_reduce_scatter(ct, ef, codec: WireCodec, axes, axis_sizes, mode,
+                         reduce_mode, param_dtype):
+    """Reduce-scatter a cotangent through ``codec`` -- THE reduce-combine
+    rule of the wire layer.  Returns ``(shard, new_ef)``.
+
+    Cast codecs: cast to the codec dtype, reduce-scatter, cast to the
+    param dtype -- op-for-op the pre-codec VJP, so fp32/bf16 reduce wires
+    stay bitwise identical to the legacy ``reduce_dtype`` path (``ef``
+    must be None: a lossless wire has no error to feed back).
+
+    q8_block: add the error-feedback residual (if any), encode ONCE, route
+    per ``reduce_mode``, and hand back the fresh quantization error as the
+    new residual.  With no FSDP axes (m == 1) the encode/decode round-trip
+    still runs, so a replicated/1-device run exercises the exact wire
+    numerics of the sharded one."""
+    if not codec.quantized:
+        if ef is not None:
+            raise ValueError(
+                f"error feedback is only defined for quantized reduce "
+                f"wires, got codec {codec.fmt!r}")
+        g = dtype_reduce_scatter(ct.astype(codec.dtype), axes, axis_sizes,
+                                 mode, reduce_mode)
+        return g.astype(param_dtype), None
+    comp = ct.astype(jnp.float32)
+    if ef is not None:
+        comp = comp + ef
+    payload = codec.encode(comp)
+    new_ef = (comp - codec.decode(payload, jnp.float32)
+              if ef is not None else None)
+    if reduce_mode == "ring_acc":
+        shard = _q8_ring_acc_reduce_scatter(payload, codec.block, axes,
+                                            axis_sizes)
+    else:
+        shard = _q8_route_reduce_scatter(payload, codec.block, axes,
+                                         axis_sizes)
+    return shard.astype(param_dtype), new_ef
+
+
+# --------------------------------------------------------------------------- #
+# payload all-gather (pure data movement)
+# --------------------------------------------------------------------------- #
+def payload_all_gather(x, axes, axis_sizes, mode):
+    """Pure data-movement all-gather for non-differentiable wire payloads
+    (int8 codes, per-block scales): gathered in ``x``'s own dtype, no VJP --
+    gradients for a quantized store flow through ``codec_grad_proxy``
+    instead (straight-through to the master shard)."""
+    x = lax.stop_gradient(x)
+    if not axes:
+        return x
+    return (_ring_all_gather(x, axes, axis_sizes) if mode == "ring"
+            else lax.all_gather(x, axes, tiled=True))
+
+
+# --------------------------------------------------------------------------- #
+# the gather/reduce-scatter primitives
+# --------------------------------------------------------------------------- #
+@partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4, 5, 6, 7, 8))
+def codec_gather(x, axes, axis_sizes, gather_codec: WireCodec,
+                 reduce_codec: WireCodec, out_dtype, param_dtype, mode,
+                 reduce_mode):
+    """All-gather ``x`` (a device-local flat buffer slice, leading axis
+    tiled) over the FSDP mesh ``axes`` (sizes ``axis_sizes``).
+
+    forward:  ``gather_codec.encode`` -> all-gather the payload (xla
+              collective or explicit ppermute ring, per ``mode``) ->
+              ``gather_codec.decode`` to ``out_dtype``
+    backward: ``reduce_codec`` reduce-scatter of the cotangent (the ZeRO-3
+              gradient reduce-scatter; see ``codec_reduce_scatter``) ->
+              cast to ``param_dtype``
+    """
+    payload = gather_codec.encode(x)
+    gathered = jax.tree.map(
+        lambda p: payload_all_gather(p, axes, axis_sizes, mode), payload)
+    return gather_codec.decode(gathered, out_dtype)
+
+
+def _cgather_fwd(x, axes, axis_sizes, gather_codec, reduce_codec, out_dtype,
+                 param_dtype, mode, reduce_mode):
+    return (codec_gather(x, axes, axis_sizes, gather_codec, reduce_codec,
+                         out_dtype, param_dtype, mode, reduce_mode), None)
+
+
+def _cgather_bwd(axes, axis_sizes, gather_codec, reduce_codec, out_dtype,
+                 param_dtype, mode, reduce_mode, _res, ct):
+    g, _ = codec_reduce_scatter(ct, None, reduce_codec, axes, axis_sizes,
+                                mode, reduce_mode, param_dtype)
+    return (g,)
+
+
+codec_gather.defvjp(_cgather_fwd, _cgather_bwd)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5, 6, 7, 8, 9))
+def codec_gather_ef(x, ef, axes, axis_sizes, gather_codec: WireCodec,
+                    reduce_codec: WireCodec, out_dtype, param_dtype, mode,
+                    reduce_mode):
+    """``codec_gather`` with an error-feedback residual threaded through
+    the quantized reduce wire.
+
+    ``ef`` is this device's residual for this buffer (shape of the local
+    cotangent, i.e. the *gathered* buffer -- sender-side EF is sized like
+    the local gradient contribution, QSDP/1-bit-Adam semantics).  The
+    forward ignores it; the backward adds it to the cotangent before
+    encoding and returns the fresh quantization error as ``ef``'s
+    cotangent, so ``jax.grad`` over ``(x, ef)`` yields
+    ``(grad_shard, new_residual)``."""
+    del ef
+    return codec_gather(x, axes, axis_sizes, gather_codec, reduce_codec,
+                        out_dtype, param_dtype, mode, reduce_mode)
+
+
+def _cgather_ef_fwd(x, ef, axes, axis_sizes, gather_codec, reduce_codec,
+                    out_dtype, param_dtype, mode, reduce_mode):
+    y = codec_gather_ef(x, ef, axes, axis_sizes, gather_codec, reduce_codec,
+                        out_dtype, param_dtype, mode, reduce_mode)
+    return y, ef
+
+
+def _cgather_ef_bwd(axes, axis_sizes, gather_codec, reduce_codec, out_dtype,
+                    param_dtype, mode, reduce_mode, ef, ct):
+    g, new_ef = codec_reduce_scatter(ct, ef, reduce_codec, axes, axis_sizes,
+                                     mode, reduce_mode, param_dtype)
+    return (g, new_ef)
+
+
+codec_gather_ef.defvjp(_cgather_ef_fwd, _cgather_ef_bwd)
+
+
+def _proxy_zeros(x, axes, axis_sizes, out_dtype):
+    n = math.prod(axis_sizes) if axes else 1
+    return jnp.zeros((n * x.shape[0],) + x.shape[1:], out_dtype)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4, 5, 6, 7))
+def codec_grad_proxy(x, axes, axis_sizes, reduce_codec: WireCodec, out_dtype,
+                     param_dtype, mode, reduce_mode):
+    """Straight-through gradient route for quantized stores.
+
+    forward: zeros of the gathered shape (no collective, no wire bytes) --
+    added to the dequantized payload so the gathered weights' value comes
+    from the codes while the gradient flows here.  backward: the standard
+    ZeRO-3 reduce-scatter of the cotangent through ``reduce_codec`` to
+    ``param_dtype`` (the master shard's dtype), exactly as
+    ``codec_gather``'s backward."""
+    return _proxy_zeros(x, axes, axis_sizes, out_dtype)
+
+
+def _proxy_fwd(x, axes, axis_sizes, reduce_codec, out_dtype, param_dtype,
+               mode, reduce_mode):
+    return (codec_grad_proxy(x, axes, axis_sizes, reduce_codec, out_dtype,
+                             param_dtype, mode, reduce_mode), None)
+
+
+def _proxy_bwd(axes, axis_sizes, reduce_codec, out_dtype, param_dtype, mode,
+               reduce_mode, _res, ct):
+    g, _ = codec_reduce_scatter(ct, None, reduce_codec, axes, axis_sizes,
+                                mode, reduce_mode, param_dtype)
+    return (g,)
+
+
+codec_grad_proxy.defvjp(_proxy_fwd, _proxy_bwd)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5, 6, 7, 8))
+def codec_grad_proxy_ef(x, ef, axes, axis_sizes, reduce_codec: WireCodec,
+                        out_dtype, param_dtype, mode, reduce_mode):
+    """``codec_grad_proxy`` with the error-feedback residual threaded
+    through, for quantized stores whose *reduce* wire is also quantized
+    (q8 payload both directions -- the full QSDP configuration)."""
+    del ef
+    return _proxy_zeros(x, axes, axis_sizes, out_dtype)
+
+
+def _proxy_ef_fwd(x, ef, axes, axis_sizes, reduce_codec, out_dtype,
+                  param_dtype, mode, reduce_mode):
+    y = codec_grad_proxy_ef(x, ef, axes, axis_sizes, reduce_codec, out_dtype,
+                            param_dtype, mode, reduce_mode)
+    return y, ef
+
+
+def _proxy_ef_bwd(axes, axis_sizes, reduce_codec, out_dtype, param_dtype,
+                  mode, reduce_mode, ef, ct):
+    g, new_ef = codec_reduce_scatter(ct, ef, reduce_codec, axes, axis_sizes,
+                                     mode, reduce_mode, param_dtype)
+    return (g, new_ef)
+
+
+codec_grad_proxy_ef.defvjp(_proxy_ef_fwd, _proxy_ef_bwd)
+
+
+# --------------------------------------------------------------------------- #
+# legacy dtype-level spelling (kept for callers/tests that think in dtypes)
+# --------------------------------------------------------------------------- #
+def sharded_gather(x, axes, axis_sizes, wire_dtype, reduce_dtype, out_dtype,
+                   param_dtype, mode, reduce_mode):
+    """The pre-codec primitive signature: cast-to-wire all-gather whose
+    backward is a cast-to-reduce reduce-scatter.  Now a thin lowering onto
+    ``codec_gather`` with cast codecs -- op-for-op identical, which is what
+    keeps every fp32/bf16 schedule bitwise-stable across the refactor."""
+    return codec_gather(
+        x, axes, axis_sizes, WireCodec(fmt_of_dtype(wire_dtype)),
+        WireCodec(fmt_of_dtype(reduce_dtype)), jnp.dtype(out_dtype),
+        jnp.dtype(param_dtype), mode, reduce_mode)

@@ -211,6 +211,9 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
         arg_bytes=float(getattr(mem, "argument_size_in_bytes", 0)),
         coll_counts=counts,
         model_flops=model_flops(cfg, shape),
+        # plan-predicted wire payloads, both directions (gather + reduce)
+        gather_wire_bytes=float(runtime.plan.gather_wire_bytes()),
+        reduce_wire_bytes=float(runtime.plan.reduce_wire_bytes()),
         note=(why + f" full_compile={t_full:.0f}s").strip(),
     )
     return r

@@ -166,6 +166,12 @@ class Roofline:
     arg_bytes: float = 0.0
     coll_counts: dict = dataclasses.field(default_factory=dict)
     model_flops: float = 0.0
+    # plan-predicted wire bytes for BOTH comm directions (the resolved
+    # ShardingPlan's codec accounting: parameter all-gather payload and
+    # gradient reduce-scatter payload), so the dry-run row shows the
+    # q8-vs-fp32 wire drops without HLO parsing
+    gather_wire_bytes: float = 0.0
+    reduce_wire_bytes: float = 0.0
     error: str = ""
     note: str = ""
 
@@ -205,6 +211,8 @@ class Roofline:
             "coll_gb_dev": round(self.collective_bytes / 1e9, 4),
             "temp_gb_dev": round(self.temp_bytes / 1e9, 3),
             "arg_gb_dev": round(self.arg_bytes / 1e9, 3),
+            "gather_wire_mb": round(self.gather_wire_bytes / 1e6, 3),
+            "reduce_wire_mb": round(self.reduce_wire_bytes / 1e6, 3),
             "model_gflops": round(self.model_flops / 1e9, 1),
             "useful_ratio": round(self.useful_ratio, 4),
             "colls": self.coll_counts,
@@ -213,11 +221,13 @@ class Roofline:
 
 
 def analyze(compiled, *, arch, shape_cfg, mesh_name, chips, cfg,
-            note="") -> Roofline:
+            note="", plan=None) -> Roofline:
     cost = cost_analysis(compiled)
     mem = compiled.memory_analysis()
     stats = parse_collectives(compiled.as_text())
     return Roofline(
+        gather_wire_bytes=float(plan.gather_wire_bytes()) if plan else 0.0,
+        reduce_wire_bytes=float(plan.reduce_wire_bytes()) if plan else 0.0,
         arch=arch, shape=shape_cfg.name, mesh=mesh_name, chips=chips,
         compile_ok=True,
         flops_per_device=float(cost.get("flops", 0.0)),
