@@ -25,7 +25,9 @@ from repro.core.schedule import VARIANTS, CommSchedule
 from repro.launch.mesh import make_local_mesh
 from repro.optim import make_optimizer
 from repro.optim.adam8bit import Adam8bit
-from repro.quant.blockwise import (dequantize_blockwise,
+# the ablations model the paper's DISABLED configurations, so they run the
+# unfused reference compositions (kernels.ref), not the fused dispatch layer
+from repro.kernels.ref import (dequantize_blockwise,
     dequantize_blockwise_log, quantize_blockwise, quantize_blockwise_log)
 
 from .common import emit, timeit

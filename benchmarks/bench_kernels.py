@@ -3,13 +3,20 @@ reference.  On CPU the interpret-mode kernel is *slower* (it's a Python
 interpreter of the kernel body) -- the number that matters here is the
 oracle agreement + the HBM-stream count derived from the kernel structure;
 wall-time wins appear on real TPU hardware.  We therefore report the jnp
-reference timing and the analytic bytes-moved ratio."""
+reference timing and the analytic bytes-moved ratio, and persist the fused
+entries to BENCH_kernels.json at the repo root (the CI artifact)."""
+import json
+import os
+
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels import ref
+from repro.kernels import ops, ref
 
 from .common import emit, timeit
+
+BENCH_JSON = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_kernels.json")
 
 
 def run(quick: bool = False):
@@ -42,7 +49,82 @@ def run(quick: bool = False):
     q = jax.jit(lambda x: ref.quantize_ref(x, 1024))
     usq = timeit(q, w, iters=5 if quick else 20)
     emit("kernel/blockwise_quant_ref", usq, f"n={n}")
-    return {"adamw": us, "adam8bit": us8, "quant": usq}
+
+    # ------------------------------------------------------------------ #
+    # fused quant hot-path kernels (PR: kernels as the execution engine)
+    # ------------------------------------------------------------------ #
+    fused = {}
+    iters = 5 if quick else 20
+    block = 1024
+
+    # gather path: fused dequant-into-compute-dtype.  Unfused moves the
+    # f32 dequant buffer to HBM and back (codes in + f32 out + f32 in +
+    # bf16 out = 1+4+4+2 bytes/elt); fused streams codes in, bf16 out.
+    codes, scales = ref.quantize_ref(w, block)
+    d_ref = jax.jit(lambda c, s: ref.dequantize_into_ref(
+        c, s, block, jnp.bfloat16))
+    us_d = timeit(d_ref, codes, scales, iters=iters)
+    match = bool(np.array_equal(
+        np.asarray(ops.dequantize_into(codes, scales, block,
+                                       out_dtype=jnp.bfloat16)),
+        np.asarray(d_ref(codes, scales))))
+    emit("kernel/dequantize_into_ref_jnp", us_d,
+         f"n={n};bytes_unfused={11};bytes_fused={3};expected_tpu_gain="
+         f"{11/3:.2f}x;fused_matches_jitted_ref={match}")
+    fused["dequantize_into"] = {
+        "ref_us": us_d, "n": n, "block": block, "parity": "BITWISE",
+        "fused_matches_jitted_ref": match,
+        "bytes_per_elt_unfused": 11, "bytes_per_elt_fused": 3}
+
+    # reduce path: fused encode + error feedback.  Unfused: ct+ef reads,
+    # comp write/read, codes+scales write, dequant write/read, new_ef
+    # write (~26 B/elt with a bf16 ct); fused: ct+ef in, codes+scales+
+    # new_ef out (~11 B/elt).
+    ct = w.astype(jnp.bfloat16)
+    ef = g * 1e-3
+    e_ref = jax.jit(lambda c, e: ref.encode_ef_ref(c, e, block))
+    us_e = timeit(e_ref, ct, ef, iters=iters)
+    got = ops.encode_ef(ct, ef, block)
+    want = e_ref(ct, ef)
+    match = bool(all(np.array_equal(np.asarray(a), np.asarray(b))
+                     for a, b in zip(got, want)))
+    emit("kernel/encode_ef_ref_jnp", us_e,
+         f"n={n};bytes_unfused~26;bytes_fused~11;expected_tpu_gain="
+         f"{26/11:.2f}x;fused_matches_jitted_ref={match}")
+    fused["encode_ef"] = {
+        "ref_us": us_e, "n": n, "block": block, "parity": "BITWISE",
+        "fused_matches_jitted_ref": match,
+        "bytes_per_elt_unfused": 26, "bytes_per_elt_fused": 11}
+
+    # serve path: int8 GEMM on gathered codes.  Dense route materializes
+    # the f32 weight (1 in + 4 out + 4 in per weight elt) then a bf16
+    # GEMM; the kernel streams int8 codes straight into the MXU.
+    k2 = 256 if quick else 1024
+    n2 = 4 * k2
+    wm = jnp.asarray(rng.normal(size=(k2, n2)).astype(np.float32)) * 0.05
+    c2, s2 = ref.quantize_ref(wm.reshape(-1), block)
+    c2 = c2.reshape(k2, n2)
+    x2 = jnp.asarray(rng.normal(size=(8, k2)).astype(np.float32))
+    mm_ref = jax.jit(lambda x, c, s: ref.q8_matmul_ref(x, c, s, block))
+    us_m = timeit(mm_ref, x2, c2, s2, iters=iters)
+    got = np.asarray(ops.q8_matmul(x2, c2, s2, block))
+    want = np.asarray(mm_ref(x2, c2, s2))
+    rel = float(np.abs(got - want).max() / max(np.abs(want).mean(), 1e-6))
+    emit("kernel/q8_matmul_ref_jnp", us_m,
+         f"k={k2};n={n2};weight_bytes_dense=9;weight_bytes_fused=1;"
+         f"rel_err_vs_dense={rel:.4f}")
+    fused["q8_matmul"] = {
+        "ref_us": us_m, "k": k2, "n": n2, "block": block,
+        "parity": "ALLCLOSE", "rel_err_vs_dense_oracle": rel,
+        "weight_bytes_per_elt_dense": 9, "weight_bytes_per_elt_fused": 1}
+
+    with open(BENCH_JSON, "w") as f:
+        json.dump({"backend": jax.default_backend(), "quick": quick,
+                   "fused_kernels": fused}, f, indent=2, sort_keys=True)
+        f.write("\n")
+    emit("kernel/bench_json", 0.0, f"wrote {BENCH_JSON}")
+
+    return {"adamw": us, "adam8bit": us8, "quant": usq, "fused": fused}
 
 
 if __name__ == "__main__":

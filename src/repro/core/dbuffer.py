@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..kernels import ops
 from .ragged import GroupPlan, Placement
 
 
@@ -106,6 +107,46 @@ class DBuffer:
             if cast is not None:
                 t = t.astype(cast)
             out[p.spec.name] = t
+        return out
+
+    def unpack_quant(self, payload, block: int,
+                     compute_dtype) -> dict[str, jax.Array]:
+        """Unpack a gathered q8_block wire payload (``{"codes",
+        "scales"}``) per tensor WITHOUT a whole-buffer dequantize.
+
+        Eligible 2-D tensors (``ops.quant_eligible``: whole number of
+        quant blocks, separable scale layout) come out as ``QuantTensor``
+        views of their codes + scales slices -- the dense weight never
+        materializes, ``layers.dense`` routes them to the int8 GEMM
+        (``ops.q8_matmul``).  Everything else gets a per-tensor fused
+        dequant into the compute dtype.  Per-tensor payload slicing relies
+        on the planner's align guarantee (tensor starts at quant-block
+        multiples); the fsdp2 interleaved layout has no contiguous
+        per-tensor payload, so it decodes the whole buffer and unpacks
+        densely (the same Copy-Out it pays for dense unpacks)."""
+        if self.plan.mode == "fsdp2":
+            dense = ops.dequantize_into(payload["codes"], payload["scales"],
+                                        block, out_dtype=compute_dtype)
+            return self.unpack(dense)
+        codes, scales = payload["codes"], payload["scales"]
+        out = {}
+        for p in self.plan.placements:
+            off, size = p.offset, p.spec.size
+            if off % block:
+                raise ValueError(
+                    f"{p.spec.name}: payload offset {off} not a multiple "
+                    f"of quant block {block} -- planner align missing?")
+            nb = -(-size // block)  # blocks covering the tensor (+ padding)
+            c = jax.lax.slice(codes, (off,), (off + nb * block,))
+            s = jax.lax.slice(scales, (off // block,),
+                              (off // block + nb,))
+            if ops.quant_eligible(p.spec.shape, block):
+                k, n = p.spec.shape
+                out[p.spec.name] = ops.QuantTensor(c.reshape(k, n), s, block)
+            else:
+                t = ops.dequantize_into(c, s, block, out_dtype=compute_dtype)
+                out[p.spec.name] = jax.lax.slice(
+                    t, (0,), (size,)).reshape(p.spec.shape)
         return out
 
     def pack_traced(self, arrays: Mapping[str, jax.Array]) -> jax.Array:

@@ -49,6 +49,7 @@ from .policy import PolicySet, ShardingPlan, make_plan
 from .ragged import TensorSpec
 from .schedule import CommSchedule
 from .store import EF_KEY, ParamStore
+from .wire import codec_reduce_scatter
 
 
 # ---------------------------------------------------------------------------
@@ -241,8 +242,10 @@ class FSDPRuntime:
     # ------------------------------------------------------------------ #
     # the ParamGetter handed to model code inside shard_map
     # ------------------------------------------------------------------ #
-    def _getter(self, local_bufs: Mapping[str, jax.Array], remat: bool = True):
-        return _ParamGetter(self, local_bufs, remat)
+    def _getter(self, local_bufs: Mapping[str, jax.Array], remat: bool = True,
+                defer_ef: bool = False, quant_matmul: bool = False):
+        return _ParamGetter(self, local_bufs, remat, defer_ef=defer_ef,
+                            quant_matmul=quant_matmul)
 
     # specs for shard_map (a pspec per state leaf; scales shard like the
     # buffer because S % block == 0)
@@ -289,13 +292,15 @@ class FSDPRuntime:
         # optimizer update
         ef_groups = tuple(n for n, lo in self.layouts.items()
                           if lo.store.has_ef)
-        if ef_groups and par.microbatches > 1:
-            raise ValueError(
-                f"reduce_wire='q8_block' (groups {list(ef_groups)}) does "
-                f"not compose with gradient accumulation "
-                f"(microbatches={par.microbatches}): each microbatch's "
-                f"backward would re-apply and re-emit the same error-"
-                f"feedback residual")
+        # Gradient accumulation composes with the quantized reduce wire via
+        # DEFERRED error feedback: the per-microbatch backward performs no
+        # collective and no encode (core.wire's *_defer_ef primitives
+        # return the raw fp32 cotangent as the residual slot's cotangent),
+        # the scan accumulates sum(ct), and ONE codec_reduce_scatter at the
+        # accumulation boundary applies the residual, encodes, and routes --
+        # identical wire numerics and residual semantics to a single batch
+        # of the same total size (encoding per microbatch would quantize
+        # partial sums ``micro`` times and corrupt the EF history).
         for n in ef_groups:
             # groups whose grads are additionally psum'd over replica axes
             # (_reduce_grads: HSDP cross-pod, TP-replicated) would compute
@@ -344,19 +349,24 @@ class FSDPRuntime:
                 frozen = {n: self.layouts[n].store.frozen(params[n])
                           for n in params}
 
-                def loss_of(tr, mb):
-                    bufs = {n: self.layouts[n].store.combine(tr[n], frozen[n])
-                            for n in tr}
-                    pg = self._getter(bufs)
-                    nll, w = self.model.loss(pg, mb)
-                    return nll, w
-
                 # clamp accumulation to a divisor of the local batch (the
                 # multi-pod mesh halves the per-device batch vs single-pod)
                 b_loc = jax.tree.leaves(batch)[0].shape[0]
                 micro = par.microbatches
                 while b_loc % micro:
                     micro -= 1
+                # EF groups defer the quantized reduce-scatter to the
+                # accumulation boundary when accumulating (micro == 1 keeps
+                # the eager path, bit for bit)
+                defer = bool(ef_groups) and micro > 1
+
+                def loss_of(tr, mb):
+                    bufs = {n: self.layouts[n].store.combine(tr[n], frozen[n])
+                            for n in tr}
+                    pg = self._getter(bufs, defer_ef=defer)
+                    nll, w = self.model.loss(pg, mb)
+                    return nll, w
+
                 if micro > 1:
                     def micro_body(acc, mb):
                         grads, nll_a, w_a = acc
@@ -371,6 +381,41 @@ class FSDPRuntime:
                     zero = jax.tree.map(jnp.zeros_like, trainable)
                     (grads, nll, w), _ = lax.scan(
                         micro_body, (zero, 0.0, 0.0), mbs)
+                    if defer:
+                        grads = dict(grads)
+                        cd = jnp.dtype(self.compute_dtype)
+                        for n in ef_groups:
+                            # the accumulation boundary: sum(ct) rode the
+                            # grad tree's EF slot (master slot held zeros);
+                            # apply the residual, encode once, reduce-
+                            # scatter -- exactly the eager EF backward on
+                            # the accumulated cotangent
+                            lo = self.layouts[n]
+                            sched = self.sched_for(n)
+                            rcodec = sched.reduce_codec(cd, lo.store.block)
+                            pdt = (jnp.dtype(jnp.float32)
+                                   if lo.store.quantized
+                                   else lo.store.storage_dtype)
+
+                            def rs(ct1, ef1, lo=lo, sched=sched,
+                                   rcodec=rcodec, pdt=pdt):
+                                return codec_reduce_scatter(
+                                    ct1, ef1, rcodec, lo.fsdp_axes,
+                                    lo.fsdp_axis_sizes, sched.gather_mode,
+                                    sched.reduce_mode, pdt)
+
+                            sum_ct = grads[n][EF_KEY]
+                            ef0 = trainable[n][EF_KEY]
+                            if sum_ct.ndim > 1:
+                                # layered group: one reduce-scatter per
+                                # layer (collectives-in-scan, the same
+                                # structure the layer gather runs)
+                                _, (shard, new_ef) = lax.scan(
+                                    lambda c, a: (c, rs(*a)), None,
+                                    (sum_ct, ef0))
+                            else:
+                                shard, new_ef = rs(sum_ct, ef0)
+                            grads[n] = {"master": shard, EF_KEY: new_ef}
                 else:
                     (nll, w), grads = jax.value_and_grad(
                         loss_of, has_aux=True)(trainable, batch)
@@ -533,7 +578,9 @@ class FSDPRuntime:
             cspec = self.cache_pspec(cache, bsz)
 
             def sharded(params, batch, cache):
-                pg = self._getter(params, remat=False)
+                pg = self._getter(
+                    params, remat=False,
+                    quant_matmul=self.schedule.serve_quant_matmul)
                 return self.model.prefill(pg, batch, cache)
 
             fn = shard_map(
@@ -558,7 +605,9 @@ class FSDPRuntime:
                         else self.batch_pspec({"i": index})["i"])
 
             def sharded(params, batch, cache, index):
-                pg = self._getter(params, remat=False)
+                pg = self._getter(
+                    params, remat=False,
+                    quant_matmul=self.schedule.serve_quant_matmul)
                 return self.model.decode(pg, batch, cache, index)
 
             fn = shard_map(
@@ -593,10 +642,15 @@ def _global_norm(runtime, grads):
 # ---------------------------------------------------------------------------
 
 class _ParamGetter:
-    def __init__(self, runtime: FSDPRuntime, bufs, remat: bool):
+    def __init__(self, runtime: FSDPRuntime, bufs, remat: bool,
+                 defer_ef: bool = False, quant_matmul: bool = False):
         self.rt = runtime
         self.bufs = bufs
         self.remat = remat
+        self.defer_ef = defer_ef
+        # serve-only: keep eligible q8_block layer weights as int8
+        # QuantTensors (ops.q8_matmul) instead of dequantizing the gather
+        self.quant_matmul = quant_matmul
         self.schedule = runtime.schedule
         self.tp_axis = runtime.tp_axis
         self.ep_axis = runtime.ep_axis
@@ -612,7 +666,11 @@ class _ParamGetter:
         lo = self.rt.layouts[name]
         return lo.store.gather(
             local, lo.fsdp_axes, lo.fsdp_axis_sizes, self.rt.sched_for(name),
-            self.rt.compute_dtype)
+            self.rt.compute_dtype,
+            defer_ef=self.defer_ef and lo.store.has_ef)
+
+    def _quant_group(self, name: str) -> bool:
+        return self.quant_matmul and self.rt.layouts[name].store.quantized
 
     def _gather_unpack(self, name: str, local: jax.Array):
         return self.rt.layouts[name].buffer.unpack(
@@ -653,13 +711,29 @@ class _ParamGetter:
         plan = sched.plan_layers(n, remat)
 
         def gather_layer(layer_bufs):
-            return tuple(self._gather_flat(g, lb)
-                         for g, lb in zip(groups, layer_bufs))
+            out = []
+            for g, lb in zip(groups, layer_bufs):
+                if self._quant_group(g):
+                    # serve quant mode: move the wire payload, defer the
+                    # dequantize decision to unpack_quant (eligible 2-D
+                    # weights never dequantize -- ops.q8_matmul)
+                    lo = self.rt.layouts[g]
+                    out.append(lo.store.gather_payload(
+                        lb, lo.fsdp_axes, lo.fsdp_axis_sizes,
+                        self.rt.sched_for(g)))
+                else:
+                    out.append(self._gather_flat(g, lb))
+            return tuple(out)
 
         def unpack_all(gathered):
             p = {}
             for g, gb in zip(groups, gathered):
-                p.update(self.rt.layouts[g].buffer.unpack(gb))
+                lo = self.rt.layouts[g]
+                if self._quant_group(g):
+                    p.update(lo.buffer.unpack_quant(
+                        gb, lo.store.block, self.compute_dtype))
+                else:
+                    p.update(lo.buffer.unpack(gb))
             return p
 
         def compute(gathered, c, user_xs):

@@ -78,7 +78,8 @@ TAGS = ("layers", "experts", "globals")
 
 # scan-structure knobs: one layer scan gathers several groups per step, so
 # these must agree across groups and always come from the PolicySet default
-STRUCTURE_FIELDS = ("prefetch", "reshard_after_forward", "keep_last_gathered")
+STRUCTURE_FIELDS = ("prefetch", "reshard_after_forward", "keep_last_gathered",
+                    "serve_quant_matmul")
 
 
 # --------------------------------------------------------------------------- #
@@ -104,6 +105,7 @@ class ShardingPolicy:
     reshard_after_forward: bool = True   # ZeRO-3 backward re-gather
     keep_last_gathered: bool = False     # last layer stays gathered
     sharded: bool = True                 # False: replicate, psum grads
+    serve_quant_matmul: bool = False     # serve-only int8-GEMM on q8 weights
 
     def __post_init__(self):
         self.to_schedule()  # knob validation lives in CommSchedule
@@ -120,6 +122,7 @@ class ShardingPolicy:
             param_store=self.store,
             reduce_wire=self.reduce_wire,
             sharded=self.sharded,
+            serve_quant_matmul=self.serve_quant_matmul,
         )
 
     @classmethod
@@ -135,6 +138,7 @@ class ShardingPolicy:
             reshard_after_forward=sched.reshard_after_forward,
             keep_last_gathered=sched.keep_last_gathered,
             sharded=sched.sharded,
+            serve_quant_matmul=sched.serve_quant_matmul,
         )
 
     def describe(self) -> str:

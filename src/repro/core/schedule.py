@@ -225,6 +225,12 @@ class CommSchedule:
     param_store: str = "fp32"
     reduce_wire: str | None = None
     sharded: bool = True
+    # serve-only: run eligible gathered q8_block weights through the
+    # int8 x int8 GEMM (kernels.q8_matmul) instead of dequantizing the
+    # all-gather -- the weight never materializes in the compute dtype.
+    # Ignored by the train step (training needs the dense gather for the
+    # straight-through gradient route) and by non-quantized stores.
+    serve_quant_matmul: bool = False
 
     def __post_init__(self):
         # name/mode validation at construction; the dtype *path* is checked
@@ -332,6 +338,11 @@ class CommSchedule:
                 "reduce-scatter; a schedule-unsharded (replicated) group "
                 "has no reduce-scatter to quantize -- its grads are "
                 "psum'd in full precision")
+        if self.serve_quant_matmul and self.param_store != "q8_block":
+            raise ValueError(
+                "serve_quant_matmul runs the int8 GEMM on gathered q8_block "
+                "codes; it requires param_store='q8_block', got "
+                f"{self.param_store!r}")
 
     def plan_layers(self, n_layers: int, remat: bool = True) -> LayerPlan:
         """Resolve the scan structure for an ``n_layers`` stack (see
@@ -424,6 +435,8 @@ APPROX_VARIANTS: dict[str, CommSchedule] = {
     "q8_reduce_ring_acc": CommSchedule(gather_mode="ring",
                                        reduce_mode="ring_acc",
                                        reduce_wire="q8_block"),
+    "q8_serve_matmul": CommSchedule(param_store="q8_block",
+                                    serve_quant_matmul=True),
 }
 
 

@@ -64,10 +64,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..quant.blockwise import quantize_blockwise
+from ..kernels import ops
 from .schedule import CommSchedule
 from .wire import (STORE_FORMATS, WireCodec, codec_gather, codec_gather_ef,
-                   codec_grad_proxy, codec_grad_proxy_ef, payload_all_gather)
+                   codec_gather_defer_ef, codec_grad_proxy,
+                   codec_grad_proxy_defer_ef, codec_grad_proxy_ef,
+                   payload_all_gather)
 
 # q8_block state keys, in tree-sorted order (dict iteration order of the
 # states the store builds; checkpoints rely on the names, not the order).
@@ -199,8 +201,7 @@ class ParamStore:
             state = np.asarray(
                 jnp.asarray(master_f32).astype(jnp.bfloat16))
         else:
-            codes, scales = quantize_blockwise(
-                jnp.asarray(master_f32), self.block)
+            codes, scales = ops.quantize(jnp.asarray(master_f32), self.block)
             state = {"codes": np.asarray(codes), "master": master_f32,
                      "scales": np.asarray(scales)}
         if not self.has_ef:
@@ -260,7 +261,7 @@ class ParamStore:
         elif self.fmt == "bf16":
             core = new_master_f32.astype(jnp.bfloat16)
         else:
-            codes, scales = quantize_blockwise(new_master_f32, self.block)
+            codes, scales = ops.quantize(new_master_f32, self.block)
             return ({"codes": codes, "master": new_master_f32,
                      "scales": scales})
         return {"master": core} if self.has_ef else core
@@ -279,20 +280,26 @@ class ParamStore:
     # ------------------------------------------------------------------ #
     def gather(self, state, axes: tuple[str, ...],
                axis_sizes: tuple[int, ...], sched: CommSchedule,
-               compute_dtype) -> jax.Array:
+               compute_dtype, defer_ef: bool = False) -> jax.Array:
         """All-gather one device-local state into the flat compute-dtype
         buffer the model unpacks, through the schedule's WireCodecs
         (core.wire).  Flat formats go through ``codec_gather`` (whose
         backward is the ZeRO-3 reduce-scatter in the reduce codec's
         format); q8_block states are already wire-encoded, so their
         codes + scales move through ``payload_all_gather``, are decoded
-        locally, and gradients route straight-through to the master shard
-        via ``codec_grad_proxy``.  When the reduce wire is quantized, the
+        locally (the fused dequant-into-compute-dtype kernel), and
+        gradients route straight-through to the master shard via
+        ``codec_grad_proxy``.  When the reduce wire is quantized, the
         EF residual is threaded through the ``*_ef`` variants and its
-        updated value returns through the grad tree."""
+        updated value returns through the grad tree; ``defer_ef`` selects
+        the deferred backward (microbatch accumulation: no collective per
+        microbatch, the runtime reduce-scatters the accumulated cotangent
+        once at the boundary -- see core.wire)."""
         cd = jnp.dtype(compute_dtype)
         rcodec = sched.reduce_codec(cd, self.block)
         ef = state[EF_KEY] if self.has_ef else None
+        if defer_ef and ef is None:
+            raise ValueError("defer_ef on a store without an EF residual")
         if not self.quantized:
             flat = state["master"] if self.has_ef else state
             gcodec = sched.gather_codec(cd)
@@ -301,26 +308,41 @@ class ParamStore:
                 return codec_gather(flat, axes, axis_sizes, gcodec, rcodec,
                                     cd, pdt, sched.gather_mode,
                                     sched.reduce_mode)
-            return codec_gather_ef(flat, ef, axes, axis_sizes, gcodec,
-                                   rcodec, cd, pdt, sched.gather_mode,
-                                   sched.reduce_mode)
-        payload = {
-            "codes": payload_all_gather(state["codes"], axes, axis_sizes,
-                                        sched.gather_mode),
-            "scales": payload_all_gather(state["scales"], axes, axis_sizes,
-                                         sched.gather_mode),
-        }
-        deq = WireCodec("q8_block", self.block).decode(payload, cd)
+            prim = codec_gather_defer_ef if defer_ef else codec_gather_ef
+            return prim(flat, ef, axes, axis_sizes, gcodec,
+                        rcodec, cd, pdt, sched.gather_mode,
+                        sched.reduce_mode)
+        deq = WireCodec("q8_block", self.block).decode(
+            self.gather_payload(state, axes, axis_sizes, sched), cd)
         f32 = jnp.dtype(jnp.float32)
         if ef is None:
             proxy = codec_grad_proxy(state["master"], axes, axis_sizes,
                                      rcodec, cd, f32, sched.gather_mode,
                                      sched.reduce_mode)
         else:
-            proxy = codec_grad_proxy_ef(state["master"], ef, axes,
-                                        axis_sizes, rcodec, cd, f32,
-                                        sched.gather_mode, sched.reduce_mode)
+            prim = (codec_grad_proxy_defer_ef if defer_ef
+                    else codec_grad_proxy_ef)
+            proxy = prim(state["master"], ef, axes,
+                         axis_sizes, rcodec, cd, f32,
+                         sched.gather_mode, sched.reduce_mode)
         return deq + proxy
+
+    def gather_payload(self, state, axes: tuple[str, ...],
+                       axis_sizes: tuple[int, ...], sched: CommSchedule):
+        """All-gather a quantized state's wire payload WITHOUT decoding:
+        ``{"codes", "scales"}`` of the full flat buffer, pure data
+        movement.  The serve path uses this to keep eligible weights in
+        int8 end to end (``DBuffer.unpack_quant`` -> ``ops.q8_matmul``);
+        training's ``gather`` decodes it through the fused kernel."""
+        if not self.quantized:
+            raise ValueError(
+                f"gather_payload on a {self.fmt!r} store (quantized only)")
+        return {
+            "codes": payload_all_gather(state["codes"], axes, axis_sizes,
+                                        sched.gather_mode),
+            "scales": payload_all_gather(state["scales"], axes, axis_sizes,
+                                         sched.gather_mode),
+        }
 
     # ------------------------------------------------------------------ #
     # accounting

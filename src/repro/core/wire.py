@@ -47,7 +47,9 @@ abstraction, owned here, that both directions consume:
 Layering: this module sits below ``core.schedule`` (which owns the
 *policy* -- CommSchedule's ``reduce_wire`` knob resolves to a WireCodec
 here) and ``core.store`` (which owns what the state tree holds).  It
-imports only ``quant.blockwise`` and ``compat``.
+imports only ``kernels.ops`` (the quant execution engine; Pallas on TPU,
+interpret-mode jnp elsewhere -- ``quant.blockwise`` stays the reference
+oracle, reached only through the kernels layer) and ``compat``.
 """
 from __future__ import annotations
 
@@ -60,7 +62,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from ..compat import float8_dtypes
-from ..quant.blockwise import dequantize_blockwise, quantize_blockwise
+from ..kernels import ops
 
 # --------------------------------------------------------------------------- #
 # format registry
@@ -140,15 +142,22 @@ class WireCodec:
         ``block`` -- the planner's align guarantee)."""
         if not self.quantized:
             return x.astype(self.dtype)
-        codes, scales = quantize_blockwise(x, self.block)
+        codes, scales = ops.quantize(x, self.block)
         return {"codes": codes, "scales": scales}
 
     def decode(self, payload, out_dtype) -> jax.Array:
-        """Wire payload -> dense buffer in ``out_dtype``."""
+        """Wire payload -> dense buffer in ``out_dtype``.
+
+        q8_block decodes through the fused dequant-into-compute-dtype
+        kernel (``ops.dequantize_into``): codes + scales land directly in
+        ``out_dtype``, never materializing an intermediate full-size fp32
+        buffer (pinned by the jaxpr regression in
+        tests/test_kernels_fused.py)."""
         if not self.quantized:
             return payload.astype(out_dtype)
-        return dequantize_blockwise(
-            payload["codes"], payload["scales"], self.block).astype(out_dtype)
+        return ops.dequantize_into(
+            payload["codes"], payload["scales"], self.block,
+            out_dtype=out_dtype)
 
     # ------------------------------------------------------------------ #
     def wire_bytes(self, n_elements: int) -> int:
@@ -302,7 +311,7 @@ def _q8_route_reduce_scatter(payload, block: int, axes: tuple[str, ...],
     codes, scales = payload["codes"], payload["scales"]
     n = math.prod(axis_sizes)
     if n == 1:
-        return dequantize_blockwise(codes, scales, block)
+        return ops.dequantize(codes, scales, block)
     ax = _ring_axis(axes)
     perm = [((i + 1) % n, i) for i in range(n)]
     n, idx, cch, sch = _q8_chunks(codes, scales, axes, axis_sizes, block)
@@ -313,8 +322,7 @@ def _q8_route_reduce_scatter(payload, block: int, axes: tuple[str, ...],
         sbuf = lax.ppermute(sbuf, ax, perm)
         parts.append((cbuf[-1], sbuf[-1]))  # from device idx+k, now home
         cbuf, sbuf = cbuf[:-1], sbuf[:-1]
-    deq = jnp.stack([dequantize_blockwise(pc, ps, block)
-                     for pc, ps in parts])
+    deq = jnp.stack([ops.dequantize(pc, ps, block) for pc, ps in parts])
     # parts[k] came from device (idx+k) % n; fold in absolute device order
     ordered = jnp.take(deq, (jnp.arange(n) - idx) % n, axis=0)
     total = ordered[0]
@@ -336,7 +344,7 @@ def _q8_ring_acc_reduce_scatter(payload, block: int, axes: tuple[str, ...],
     codes, scales = payload["codes"], payload["scales"]
     n = math.prod(axis_sizes)
     if n == 1:
-        return dequantize_blockwise(codes, scales, block)
+        return ops.dequantize(codes, scales, block)
     ax = _ring_axis(axes)
     perm = [((i + 1) % n, i) for i in range(n)]
     n, idx, cch, sch = _q8_chunks(codes, scales, axes, axis_sizes, block)
@@ -345,10 +353,10 @@ def _q8_ring_acc_reduce_scatter(payload, block: int, axes: tuple[str, ...],
     for k in range(2, n + 1):
         acc_c = lax.ppermute(acc_c, ax, perm)
         acc_s = lax.ppermute(acc_s, ax, perm)
-        val = (dequantize_blockwise(acc_c, acc_s, block)
-               + dequantize_blockwise(cch[k % n], sch[k % n], block))
+        val = (ops.dequantize(acc_c, acc_s, block)
+               + ops.dequantize(cch[k % n], sch[k % n], block))
         if k < n:  # still in flight: requantize for the next hop
-            acc_c, acc_s = quantize_blockwise(val, block)
+            acc_c, acc_s = ops.quantize(val, block)
     return val
 
 
@@ -391,12 +399,15 @@ def codec_reduce_scatter(ct, ef, codec: WireCodec, axes, axis_sizes, mode,
         g = dtype_reduce_scatter(ct.astype(codec.dtype), axes, axis_sizes,
                                  mode, reduce_mode)
         return g.astype(param_dtype), None
-    comp = ct.astype(jnp.float32)
     if ef is not None:
-        comp = comp + ef
-    payload = codec.encode(comp)
-    new_ef = (comp - codec.decode(payload, jnp.float32)
-              if ef is not None else None)
+        # fused EF-add + encode + residual update in one kernel pass;
+        # bitwise identical to the unfused comp/encode/decode/subtract
+        # sequence (pinned by tests/test_kernels_fused.py)
+        codes, scales, new_ef = ops.encode_ef(ct, ef, codec.block)
+        payload = {"codes": codes, "scales": scales}
+    else:
+        payload = codec.encode(ct.astype(jnp.float32))
+        new_ef = None
     if reduce_mode == "ring_acc":
         shard = _q8_ring_acc_reduce_scatter(payload, codec.block, axes,
                                             axis_sizes)
@@ -556,6 +567,79 @@ def _proxy_ef_bwd(axes, axis_sizes, reduce_codec, out_dtype, param_dtype,
 
 
 codec_grad_proxy_ef.defvjp(_proxy_ef_fwd, _proxy_ef_bwd)
+
+
+# --------------------------------------------------------------------------- #
+# deferred error feedback (microbatch gradient accumulation)
+# --------------------------------------------------------------------------- #
+# With gradient accumulation the quantized reduce wire must encode ONCE per
+# optimizer step, at the accumulation boundary -- encoding every microbatch
+# would quantize partial sums n_micro times and change the residual
+# semantics.  The ``*_defer_ef`` primitives have the same forward as their
+# eager twins, but their backward performs NO collective: the param slot
+# gets zeros (shard-shaped, so the microbatch scan's tree accumulation
+# stays well-typed) and the raw fp32 cotangent comes back as the
+# residual's cotangent.  The scan then accumulates sum(ct) in the EF grad
+# slot, and ``core.fsdp`` calls ``codec_reduce_scatter(sum_ct, ef, ...)``
+# once at the boundary -- identical wire numerics to a single batch of the
+# same total size.
+
+def _defer_bwd(axes, axis_sizes, param_dtype, ct):
+    n = math.prod(axis_sizes) if axes else 1
+    shard = jnp.zeros((ct.shape[0] // n,) + ct.shape[1:], param_dtype)
+    return shard, ct.astype(jnp.float32)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5, 6, 7, 8, 9))
+def codec_gather_defer_ef(x, ef, axes, axis_sizes, gather_codec: WireCodec,
+                          reduce_codec: WireCodec, out_dtype, param_dtype,
+                          mode, reduce_mode):
+    """``codec_gather_ef`` for microbatch accumulation: the backward defers
+    the quantized reduce-scatter, returning (zero shard, ct.f32) so the
+    accumulated cotangent can be encoded once at the boundary."""
+    del ef
+    return codec_gather(x, axes, axis_sizes, gather_codec, reduce_codec,
+                        out_dtype, param_dtype, mode, reduce_mode)
+
+
+def _cgather_def_fwd(x, ef, axes, axis_sizes, gather_codec, reduce_codec,
+                     out_dtype, param_dtype, mode, reduce_mode):
+    y = codec_gather_defer_ef(x, ef, axes, axis_sizes, gather_codec,
+                              reduce_codec, out_dtype, param_dtype, mode,
+                              reduce_mode)
+    return y, None
+
+
+def _cgather_def_bwd(axes, axis_sizes, gather_codec, reduce_codec, out_dtype,
+                     param_dtype, mode, reduce_mode, _res, ct):
+    return _defer_bwd(axes, axis_sizes, param_dtype, ct)
+
+
+codec_gather_defer_ef.defvjp(_cgather_def_fwd, _cgather_def_bwd)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5, 6, 7, 8))
+def codec_grad_proxy_defer_ef(x, ef, axes, axis_sizes,
+                              reduce_codec: WireCodec, out_dtype,
+                              param_dtype, mode, reduce_mode):
+    """``codec_grad_proxy_ef`` with the deferred (microbatch) backward."""
+    del ef
+    return _proxy_zeros(x, axes, axis_sizes, out_dtype)
+
+
+def _proxy_def_fwd(x, ef, axes, axis_sizes, reduce_codec, out_dtype,
+                   param_dtype, mode, reduce_mode):
+    y = codec_grad_proxy_defer_ef(x, ef, axes, axis_sizes, reduce_codec,
+                                  out_dtype, param_dtype, mode, reduce_mode)
+    return y, None
+
+
+def _proxy_def_bwd(axes, axis_sizes, reduce_codec, out_dtype, param_dtype,
+                   mode, reduce_mode, _res, ct):
+    return _defer_bwd(axes, axis_sizes, param_dtype, ct)
+
+
+codec_grad_proxy_defer_ef.defvjp(_proxy_def_fwd, _proxy_def_bwd)
 
 
 # --------------------------------------------------------------------------- #

@@ -5,9 +5,29 @@ blocks (32x32 == 1024 flat elements), which RaggedShard's planner guarantees
 never straddle tensors or device boundaries.  This is bandwidth-bound
 elementwise work -- exactly what wants a fused VMEM pass.
 
-Layout: x is viewed as (n_blocks, block); one grid row handles TILE_BLOCKS
+Layout: x is viewed as (n_blocks, block); one grid row handles ``tile``
 quant blocks.  block is a multiple of 128 (lane width); TILE_BLOCKS x block
 tiles fit comfortably in VMEM (default 8 x 1024 x 4B = 32 KiB per ref).
+
+Tiling rule (``_resolve_tile``): compiled (TPU) runs the TILE_BLOCKS grid;
+interpret mode (the CPU container, where the grid is unrolled by the
+interpreter) defaults to ONE full-width tile -- the kernel body applied to
+the whole (n_blocks, block) view, which is bitwise identical and keeps the
+trace linear in ops, not in grid steps.  Tests pass ``tile_blocks=`` to
+force the tiled grid in interpret mode and exercise the cdiv overhang
+(partial last tile): per-block absmax has no cross-row dataflow and Pallas
+pads reads / clips writes, so the overhang needs no masking -- pinned by
+the partial-tile parity suite in tests/test_kernels.py.
+
+Contract: ``n % block != 0``, ``block < 1``, and a scales/blocks mismatch
+raise the same ValueError as the jnp reference (the checks are shared with
+``quant.blockwise``), instead of failing later with a cryptic reshape
+error.
+
+``dequantize_into`` is the gather-path fused kernel: codes + scales ->
+*compute dtype* in one pass, so no full-size fp32 buffer exists between
+the dequant multiply and the cast (the jaxpr regression in
+tests/test_kernels_fused.py pins this).
 """
 from __future__ import annotations
 
@@ -17,7 +37,20 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from ..quant.blockwise import _check_blocking, _check_scales
+
 TILE_BLOCKS = 8
+
+
+def _resolve_tile(total: int, interpret: bool,
+                  tile_blocks: int | None) -> int:
+    """Blocks per grid row: explicit override > full-width (interpret) >
+    TILE_BLOCKS (compiled)."""
+    if tile_blocks is not None:
+        return max(1, min(tile_blocks, total))
+    if interpret:
+        return max(1, total)
+    return max(1, min(TILE_BLOCKS, total))
 
 
 def _quant_kernel(x_ref, codes_ref, scales_ref):
@@ -30,25 +63,30 @@ def _quant_kernel(x_ref, codes_ref, scales_ref):
     scales_ref[...] = scale
 
 
-def _dequant_kernel(codes_ref, scales_ref, out_ref):
+def _dequant_kernel(out_dtype, codes_ref, scales_ref, out_ref):
+    # one fused pass: int8 -> f32 multiply -> target dtype, never writing
+    # the f32 product to memory (out_ref IS the compute-dtype buffer)
     out_ref[...] = (
         codes_ref[...].astype(jnp.float32) * scales_ref[...][:, None]
-    )
+    ).astype(out_dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("block", "interpret"))
-def quantize(x, *, block: int = 1024, interpret: bool = False):
+@functools.partial(jax.jit,
+                   static_argnames=("block", "interpret", "tile_blocks"))
+def quantize(x, *, block: int = 1024, interpret: bool = False,
+             tile_blocks: int | None = None):
     """x: (..., n) with n % block == 0 -> (codes int8 like x, scales f32
     (..., n//block))."""
     shape = x.shape
     n = shape[-1]
+    _check_blocking(n, block, "quantize")
     nb = n // block
     lead = 1
     for s in shape[:-1]:
         lead *= s
     xb = x.reshape(lead * nb, block)
     total = lead * nb
-    tb = min(TILE_BLOCKS, total)
+    tb = _resolve_tile(total, interpret, tile_blocks)
     grid = (pl.cdiv(total, tb),)
     codes, scales = pl.pallas_call(
         _quant_kernel,
@@ -67,28 +105,46 @@ def quantize(x, *, block: int = 1024, interpret: bool = False):
     return codes.reshape(shape), scales.reshape(shape[:-1] + (nb,))
 
 
-@functools.partial(jax.jit, static_argnames=("block", "interpret"))
-def dequantize(codes, scales, *, block: int = 1024,
-               interpret: bool = False):
+@functools.partial(jax.jit,
+                   static_argnames=("block", "out_dtype", "interpret",
+                                    "tile_blocks"))
+def dequantize_into(codes, scales, *, block: int = 1024,
+                    out_dtype=jnp.float32, interpret: bool = False,
+                    tile_blocks: int | None = None):
+    """Fused dequant-into-compute-dtype: codes + scales -> ``out_dtype``
+    in one VMEM pass (the all-gather decode hot path).  With
+    out_dtype=float32 this is the plain dequantize."""
     shape = codes.shape
     n = shape[-1]
+    _check_blocking(n, block, "dequantize")
     nb = n // block
+    _check_scales(n, block, scales.shape[-1], "dequantize")
     lead = 1
     for s in shape[:-1]:
         lead *= s
     cb = codes.reshape(lead * nb, block)
     sb = scales.reshape(lead * nb)
     total = lead * nb
-    tb = min(TILE_BLOCKS, total)
+    tb = _resolve_tile(total, interpret, tile_blocks)
+    out_dtype = jnp.dtype(out_dtype)
     out = pl.pallas_call(
-        _dequant_kernel,
+        functools.partial(_dequant_kernel, out_dtype),
         grid=(pl.cdiv(total, tb),),
         in_specs=[
             pl.BlockSpec((tb, block), lambda i: (i, 0)),
             pl.BlockSpec((tb,), lambda i: (i,)),
         ],
         out_specs=pl.BlockSpec((tb, block), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((total, block), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((total, block), out_dtype),
         interpret=interpret,
     )(cb, sb)
     return out.reshape(shape)
+
+
+def dequantize(codes, scales, *, block: int = 1024, interpret: bool = False,
+               tile_blocks: int | None = None):
+    """f32 dequantize (the pre-fusion signature, kept for the optimizer
+    paths that want the fp32 buffer anyway)."""
+    return dequantize_into(codes, scales, block=block,
+                           out_dtype=jnp.float32, interpret=interpret,
+                           tile_blocks=tile_blocks)

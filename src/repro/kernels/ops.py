@@ -1,16 +1,43 @@
-"""Jitted public wrappers for the Pallas kernels.
+"""THE dispatch layer for every quant hot path (repro.kernels).
 
-On CPU (this container) the kernels execute in ``interpret=True`` mode --
-the kernel body runs as traced jnp on the host, which is how we validate
-them against ref.py.  On a real TPU backend they compile to Mosaic.
+Every hot-path call site (core.wire encode/decode, core.store
+create/rebuild, the q8 reduce-scatter internals, optim.adam8bit, the serve
+int8-GEMM) goes through these wrappers -- never through ``quant.blockwise``
+directly (CI greps for that).  Dispatch rule:
+
+  * TPU backend: the Pallas kernels compile to Mosaic with the TILE_BLOCKS
+    grid.
+  * everywhere else (this CPU container): the same kernel body runs in
+    ``interpret=True`` mode as ONE full-width tile -- traced jnp, bitwise
+    identical to the jitted jnp reference and O(ops), not O(grid steps)
+    (see blockwise_quant._resolve_tile).
+
+``quant.blockwise`` stays the reference implementation and the parity
+oracle (re-exported through ref.py); the log-space variants used by 8-bit
+Adam's second moment have no standalone fused kernel (the fused
+adam8bit_update kernel inlines them), so their dispatch is the reference
+on every backend -- documented here so the import-check story stays
+one sentence: hot paths import repro.kernels.ops, full stop.
 """
 from __future__ import annotations
 
 import jax
 
+from ..quant.blockwise import (dequantize_blockwise_log,
+                               quantize_blockwise_log)
 from .adam8bit_update import adam8bit_update as _adam8
 from .adam_update import adamw_update as _adamw
-from .blockwise_quant import dequantize as _deq, quantize as _q
+from .blockwise_quant import (dequantize as _deq,
+                              dequantize_into as _deq_into, quantize as _q)
+from .encode_ef import encode_ef as _encode_ef
+from .q8_matmul import (QuantTensor, fold_scales, q8_matmul as _q8mm,
+                        quant_eligible)
+
+__all__ = [
+    "quantize", "dequantize", "dequantize_into", "encode_ef", "q8_matmul",
+    "quantize_log", "dequantize_log", "adamw_update", "adam8bit_update",
+    "QuantTensor", "quant_eligible", "fold_scales",
+]
 
 
 def _interpret() -> bool:
@@ -23,6 +50,35 @@ def quantize(x, block: int = 1024):
 
 def dequantize(codes, scales, block: int = 1024):
     return _deq(codes, scales, block=block, interpret=_interpret())
+
+
+def dequantize_into(codes, scales, block: int = 1024, *, out_dtype):
+    """Gather-path fused decode: codes + scales -> out_dtype, no
+    intermediate full-size fp32 buffer."""
+    return _deq_into(codes, scales, block=block, out_dtype=out_dtype,
+                     interpret=_interpret())
+
+
+def encode_ef(ct, ef, block: int = 1024):
+    """Reduce-path fused encode + error feedback:
+    (codes, scales, new_ef) of ``comp = ct.f32 + ef``."""
+    return _encode_ef(ct, ef, block=block, interpret=_interpret())
+
+
+def q8_matmul(x, codes, scales, block: int = 1024, *, out_dtype=None):
+    """Serve-path int8 x int8 GEMM on gathered codes (ALLCLOSE class)."""
+    return _q8mm(x, codes, scales, block=block, out_dtype=out_dtype,
+                 interpret=_interpret())
+
+
+def quantize_log(x, block: int = 1024):
+    """Log-space blockwise quantize (8-bit Adam's v): reference on every
+    backend -- no standalone fused kernel (adam8bit_update fuses it)."""
+    return quantize_blockwise_log(x, block)
+
+
+def dequantize_log(codes, scales, block: int = 1024):
+    return dequantize_blockwise_log(codes, scales, block)
 
 
 def adamw_update(w, g, m, v, mask, *, lr, b1, b2, eps, wd, c1, c2):

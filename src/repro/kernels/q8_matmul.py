@@ -1,0 +1,152 @@
+"""Pallas TPU kernel: int8 x int8 matmul on gathered q8_block codes.
+
+The serve/decode hot path with ``param_store="q8_block"`` previously
+dequantized every gathered layer to the compute dtype before its matmuls.
+This kernel keeps the weight in int8 end to end (the rtp-llm dequant-GEMM
+pattern): the per-block weight scale is folded into the *activation*, the
+scaled activation is quantized per row, and the MXU contracts int8 x int8
+into int32.
+
+Scale algebra.  A (K, N) weight is stored row-major in the flat buffer, so
+quant block ``b`` covers flat elements [b*block, (b+1)*block) and the
+dequant scale of element (k, n) varies along the contraction index k --
+a post-hoc rescale of an int8 GEMM is impossible.  Two layouts make the
+scale separable per output-column group j (both produced by the planner's
+block-aligned tensor starts):
+
+  * case A -- ``N % block == 0``: each row k holds nj = N/block blocks;
+    block j of row k covers columns [j*block, (j+1)*block), scale
+    s(k, j) = scales[k*nj + j].
+  * case B -- ``block % N == 0``: one block spans r = block/N whole rows,
+    s(k) = scales[k // r] independent of n (nj = 1).
+
+Both cases reduce to one contract: scales arranged (nj, K); for group j,
+``y[:, cols_j] = rowquant(x * s[j]) @ codes[:, cols_j]`` rescaled by the
+activation row scale.  Shapes outside these two cases are ineligible
+(``quant_eligible``) and fall back to the fused dequantize.
+
+Parity class: ALLCLOSE vs the dense reference (x @ dequantize(w)) -- the
+activation row-quantization is new error by design, bounded by ~1/254
+relative per element.  The kernel-vs-jnp-equivalent comparison is bitwise
+(same op sequence); both are pinned in tests/test_kernels_fused.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..quant.blockwise import _check_blocking, _check_scales
+from .blockwise_quant import _resolve_tile  # noqa: F401  (shared tiling doc)
+
+
+def quant_eligible(shape: tuple[int, ...], block: int) -> bool:
+    """Can a tensor of ``shape`` run the int8-GEMM path with this quant
+    block?  2-D, whole number of blocks, and a separable scale layout."""
+    if len(shape) != 2:
+        return False
+    k, n = shape
+    if (k * n) % block:
+        return False
+    return n % block == 0 or block % n == 0
+
+
+def fold_scales(scales_flat, k: int, n: int, block: int) -> jax.Array:
+    """Rearrange flat row-major block scales into the kernel's (nj, K)
+    contract (see module docstring)."""
+    if n % block == 0:
+        nj = n // block
+        return scales_flat.reshape(k, nj).T           # s[j, k]
+    if block % n == 0:
+        r = block // n
+        return jnp.repeat(scales_flat, r).reshape(1, k)
+    raise ValueError(
+        f"q8_matmul: weight ({k}, {n}) has no separable scale layout for "
+        f"block {block} (need N % block == 0 or block % N == 0)")
+
+
+def _q8mm_kernel(out_dtype, x_ref, s_ref, w_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)                # (M, K)
+    a = x * s_ref[...]                                # fold w-scales, (M, K)
+    rmax = jnp.max(jnp.abs(a), axis=1)                # per-row absmax
+    rs = rmax / 127.0
+    inv = jnp.where(rs > 0, 1.0 / jnp.maximum(rs, 1e-30), 0.0)
+    a8 = jnp.clip(jnp.round(a * inv[:, None]), -127, 127).astype(jnp.int8)
+    acc = jax.lax.dot_general(
+        a8, w_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)             # int8 x int8 -> int32
+    o_ref[...] = (acc.astype(jnp.float32) * rs[:, None]).astype(out_dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block", "out_dtype", "interpret"))
+def q8_matmul(x, codes, scales, *, block: int = 1024, out_dtype=None,
+              interpret: bool = False):
+    """x: (..., K) float; codes: (K, N) int8; scales: flat f32
+    ((K*N)//block,) row-major block scales.  Returns (..., N) in
+    ``out_dtype`` (default: x.dtype) without ever materializing the
+    dequantized weight."""
+    k, n = codes.shape
+    _check_blocking(k * n, block, "q8_matmul")
+    _check_scales(k * n, block, scales.shape[-1], "q8_matmul")
+    out_dtype = jnp.dtype(out_dtype if out_dtype is not None else x.dtype)
+    lead = x.shape[:-1]
+    m = 1
+    for s in lead:
+        m *= s
+    xm = x.reshape(m, k)
+    s2 = fold_scales(scales, k, n, block)             # (nj, K)
+    nj = s2.shape[0]
+    ncols = n // nj
+    out = pl.pallas_call(
+        functools.partial(_q8mm_kernel, out_dtype),
+        grid=(nj,),
+        in_specs=[
+            pl.BlockSpec((m, k), lambda j: (0, 0)),
+            pl.BlockSpec((1, k), lambda j: (j, 0)),
+            pl.BlockSpec((k, ncols), lambda j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((m, ncols), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        interpret=interpret,
+    )(xm, s2, codes)
+    return out.reshape(lead + (n,))
+
+
+# --------------------------------------------------------------------------- #
+# QuantTensor: a gathered-but-still-quantized weight view
+# --------------------------------------------------------------------------- #
+class QuantTensor:
+    """A 2-D weight as int8 codes + flat block scales, as unpacked from a
+    gathered q8_block buffer (core.dbuffer.unpack_quant).  Model code
+    multiplies through ``layers.dense`` -> ``ops.q8_matmul`` so the dense
+    weight never materializes.  Registered as a pytree (codes/scales are
+    leaves, block is static) so it traces through scan/jit."""
+
+    __slots__ = ("codes", "scales", "block")
+
+    def __init__(self, codes, scales, block: int):
+        self.codes = codes
+        self.scales = scales
+        self.block = int(block)
+
+    @property
+    def shape(self):
+        return self.codes.shape
+
+    @property
+    def ndim(self):
+        return self.codes.ndim
+
+    def __repr__(self):
+        return (f"QuantTensor(shape={tuple(self.codes.shape)}, "
+                f"block={self.block})")
+
+
+jax.tree_util.register_pytree_node(
+    QuantTensor,
+    lambda qt: ((qt.codes, qt.scales), qt.block),
+    lambda block, leaves: QuantTensor(leaves[0], leaves[1], block),
+)

@@ -17,6 +17,32 @@ def dequantize_ref(codes, scales, block: int):
     return dequantize_blockwise(codes, scales, block)
 
 
+def dequantize_into_ref(codes, scales, block: int, out_dtype):
+    """Unfused gather-path decode: f32 dequant buffer, THEN the cast --
+    exactly what the fused kernel eliminates (same values, one more
+    full-size fp32 materialization)."""
+    return dequantize_blockwise(codes, scales, block).astype(out_dtype)
+
+
+def encode_ef_ref(ct, ef, block: int):
+    """Unfused reduce-path encode + error feedback (the op sequence
+    core.wire ran before fusion): returns (codes, scales, new_ef)."""
+    comp = ct.astype(jnp.float32) + ef
+    codes, scales = quantize_blockwise(comp, block)
+    new_ef = comp - dequantize_blockwise(codes, scales, block)
+    return codes, scales, new_ef
+
+
+def q8_matmul_ref(x, codes, scales, block: int, out_dtype=None):
+    """Dense semantic oracle for the int8-GEMM path: dequantize the whole
+    weight, matmul in f32.  The kernel is ALLCLOSE to this (activation
+    row-quantization error), never bitwise."""
+    k, n = codes.shape
+    w = dequantize_blockwise(codes.reshape(-1), scales, block).reshape(k, n)
+    y = x.astype(jnp.float32) @ w
+    return y.astype(out_dtype if out_dtype is not None else x.dtype)
+
+
 def adamw_update_ref(w, g, m, v, mask, lr, b1, b2, eps, wd, c1, c2):
     g = g.astype(jnp.float32)
     m2 = b1 * m + (1 - b1) * g

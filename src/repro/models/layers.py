@@ -18,7 +18,33 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from ..kernels import ops
+
 NEG_INF = -1e30
+
+
+def dense(x, w):
+    """``y = x @ w`` with weight-format dispatch: a plain array casts to
+    the activation dtype (op-for-op the pre-helper spelling, bitwise
+    neutral); a ``QuantTensor`` (gathered-but-still-int8 q8_block weight,
+    serve quant mode) routes through the int8 x int8 GEMM so the dense
+    weight never materializes."""
+    if isinstance(w, ops.QuantTensor):
+        return ops.q8_matmul(x, w.codes, w.scales, w.block)
+    return x @ w.astype(x.dtype)
+
+
+def to_dense(w, dtype):
+    """Materialize a weight in ``dtype`` -- the fallback for call sites
+    that must slice or transpose the weight itself (replicated-KV head
+    slicing, tied embeddings): QuantTensors take one fused per-tensor
+    dequant, plain arrays just cast."""
+    if isinstance(w, ops.QuantTensor):
+        k, n = w.shape
+        return ops.dequantize_into(
+            w.codes.reshape(-1), w.scales, w.block,
+            out_dtype=dtype).reshape(k, n)
+    return w.astype(dtype)
 
 
 def psum(x, axis):
@@ -206,14 +232,19 @@ def attention(
         hkv = 1
 
     def proj(name, h, kv=False):
-        w = p[prefix + name].astype(x.dtype)
+        w = p[prefix + name]
         b = (p[prefix + name + "_b"].astype(x.dtype)
              if cfg.qkv_bias and prefix + name + "_b" in p else None)
         if kv and kv_rep:
-            w = lax.dynamic_slice(w, (0, kv_head * hd), (w.shape[0], hd))
+            # head slicing needs the dense weight (QuantTensor scale
+            # blocks are not column-sliceable)
+            wd = lax.dynamic_slice(to_dense(w, x.dtype),
+                                   (0, kv_head * hd), (w.shape[0], hd))
             if b is not None:
                 b = lax.dynamic_slice(b, (kv_head * hd,), (hd,))
-        y = x @ w
+            y = x @ wd
+        else:
+            y = dense(x, w)
         if b is not None:
             y = y + b
         return y.reshape(B, T, h, hd).transpose(0, 2, 1, 3)
@@ -266,7 +297,7 @@ def attention(
         new_cache = {"k": ck, "v": cv, "pos": cpos}
 
     out = out.transpose(0, 2, 1, 3).reshape(B, T, hq * hd)
-    out = out @ p[prefix + "wo"].astype(x.dtype)
+    out = dense(out, p[prefix + "wo"])
     return reduce_out(out, tp_axis, sp), new_cache
 
 
@@ -279,13 +310,13 @@ def cross_attention(cfg, p, x, memory, *, tp_axis=None, tp=1, prefix="x_"):
     if kv_rep:
         raise ValueError("cross-attention with tp > n_kv is not supported")
 
-    q = (rms_norm(x, p[prefix + "lnq"], cfg.norm_eps) @ p[prefix + "wq"].astype(x.dtype)
-         ).reshape(B, T, hq, hd).transpose(0, 2, 1, 3)
-    k = (memory @ p[prefix + "wk"].astype(x.dtype)).reshape(B, M, hkv, hd).transpose(0, 2, 1, 3)
-    v = (memory @ p[prefix + "wv"].astype(x.dtype)).reshape(B, M, hkv, hd).transpose(0, 2, 1, 3)
+    q = dense(rms_norm(x, p[prefix + "lnq"], cfg.norm_eps), p[prefix + "wq"]
+              ).reshape(B, T, hq, hd).transpose(0, 2, 1, 3)
+    k = dense(memory, p[prefix + "wk"]).reshape(B, M, hkv, hd).transpose(0, 2, 1, 3)
+    v = dense(memory, p[prefix + "wv"]).reshape(B, M, hkv, hd).transpose(0, 2, 1, 3)
     out = chunked_attention(q, k, v)
     out = out.transpose(0, 2, 1, 3).reshape(B, T, hq * hd)
-    return psum(out @ p[prefix + "wo"].astype(x.dtype), tp_axis)
+    return psum(dense(out, p[prefix + "wo"]), tp_axis)
 
 
 # ---------------------------------------------------------------------------
@@ -293,17 +324,16 @@ def cross_attention(cfg, p, x, memory, *, tp_axis=None, tp=1, prefix="x_"):
 # ---------------------------------------------------------------------------
 
 def mlp(cfg, p, x, *, tp_axis=None, prefix="", sp=False):
-    w1 = p[prefix + "w1"].astype(x.dtype)
-    w2 = p[prefix + "w2"].astype(x.dtype)
     if cfg.mlp == "swiglu":
-        h = jax.nn.silu(x @ w1) * (x @ p[prefix + "w3"].astype(x.dtype))
+        h = jax.nn.silu(dense(x, p[prefix + "w1"])) * dense(x, p[prefix + "w3"])
     elif cfg.mlp == "geglu":
-        h = jax.nn.gelu(x @ w1, approximate=True) * (x @ p[prefix + "w3"].astype(x.dtype))
+        h = (jax.nn.gelu(dense(x, p[prefix + "w1"]), approximate=True)
+             * dense(x, p[prefix + "w3"]))
     elif cfg.mlp == "squared_relu":  # nemotron-4 [arXiv:2402.16819]
-        h = jnp.square(jax.nn.relu(x @ w1))
+        h = jnp.square(jax.nn.relu(dense(x, p[prefix + "w1"])))
     else:
         raise ValueError(cfg.mlp)
-    return reduce_out(h @ w2, tp_axis, sp)
+    return reduce_out(dense(h, p[prefix + "w2"]), tp_axis, sp)
 
 
 # ---------------------------------------------------------------------------

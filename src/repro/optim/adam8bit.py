@@ -7,17 +7,16 @@ boundary -- each device (de)quantizes with zero communication, which is
 the paper's central flexibility claim.
 
 States: m, v stored as int8 codes + one f32 absmax scale per block.
-Optionally uses the fused Pallas kernel (repro.kernels.adam8bit_update);
-defaults to the jnp path, which is also the kernel's oracle.
+The (de)quantize steps run through the kernels dispatch layer
+(repro.kernels.ops: fused Pallas on TPU, interpreted elsewhere); the
+fully-fused single-kernel update (repro.kernels.adam8bit_update) remains
+the opt-in fast path and this jnp composition is its oracle.
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
 
-from ..quant.blockwise import (
-    dequantize_blockwise, dequantize_blockwise_log, quantize_blockwise,
-    quantize_blockwise_log,
-)
+from ..kernels import ops
 from .common import OptimizerBase, matrix_mask_local
 
 
@@ -56,16 +55,15 @@ class Adam8bit(OptimizerBase):
             g = grads[name].astype(jnp.float32)
             # m: signed linear int8; v: log-space int8 (dynamic range --
             # linear quantization underflows v and explodes the update)
-            m = dequantize_blockwise(state["m8"][name], state["ms"][name], bq)
-            v = dequantize_blockwise_log(state["v8"][name],
-                                         state["vs"][name], bq)
+            m = ops.dequantize(state["m8"][name], state["ms"][name], bq)
+            v = ops.dequantize_log(state["v8"][name], state["vs"][name], bq)
             m = self.b1 * m + (1 - self.b1) * g
             v = self.b2 * v + (1 - self.b2) * g * g
             upd = (m / c1) / (jnp.sqrt(v / c2) + self.eps)
             wdm = matrix_mask_local(runtime, runtime.layouts[name], w.shape)
             new_p[name] = store.rebuild(w - lr * (upd + self.wd * wdm * w))
-            m8, ms = quantize_blockwise(m, bq)
-            v8, vs = quantize_blockwise_log(v, bq)
+            m8, ms = ops.quantize(m, bq)
+            v8, vs = ops.quantize_log(v, bq)
             new_s["m8"][name], new_s["ms"][name] = m8, ms
             new_s["v8"][name], new_s["vs"][name] = v8, vs
         return new_p, new_s

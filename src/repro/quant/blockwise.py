@@ -16,12 +16,24 @@ import jax.numpy as jnp
 
 def _check_blocking(n: int, block: int, who: str) -> None:
     """Shape validation that survives ``python -O`` (these are API
-    contracts, not internal invariants, so no bare asserts)."""
+    contracts, not internal invariants, so no bare asserts).  Shared with
+    the Pallas kernel wrappers (repro.kernels) so the kernel and the
+    reference raise the identical ValueError instead of the kernel failing
+    later with a cryptic reshape error."""
     if block < 1:
         raise ValueError(f"{who}: block must be >= 1, got {block}")
     if n % block != 0:
         raise ValueError(
             f"{who}: last dim {n} not divisible by block {block}")
+
+
+def _check_scales(n: int, block: int, scales_last: int, who: str) -> None:
+    """The dequantize-side half of the contract: one scale per block.
+    Shared with the kernel wrappers for identical ValueErrors."""
+    if scales_last != n // block:
+        raise ValueError(
+            f"{who}: scales last dim {scales_last} != "
+            f"{n // block} blocks")
 
 
 def quantize_blockwise(x, block: int):
@@ -40,10 +52,7 @@ def quantize_blockwise(x, block: int):
 def dequantize_blockwise(codes, scales, block: int):
     n = codes.shape[-1]
     _check_blocking(n, block, "dequantize_blockwise")
-    if scales.shape[-1] != n // block:
-        raise ValueError(
-            f"dequantize_blockwise: scales last dim {scales.shape[-1]} != "
-            f"{n // block} blocks")
+    _check_scales(n, block, scales.shape[-1], "dequantize_blockwise")
     cb = codes.reshape(codes.shape[:-1] + (n // block, block)).astype(jnp.float32)
     out = cb * scales[..., None]
     return out.reshape(codes.shape)

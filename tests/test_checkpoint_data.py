@@ -159,7 +159,7 @@ def test_q8_quant_block_change_requantizes(tmp_path):
     import dataclasses as dc
 
     from repro.core.schedule import CommSchedule
-    from repro.quant.blockwise import quantize_blockwise
+    from repro.kernels import ops
 
     sched = CommSchedule(param_store="q8_block")
     cfg = get_config("gemma2-2b").reduced()  # quant_block=64
@@ -175,7 +175,10 @@ def test_q8_quant_block_change_requantizes(tmp_path):
                                       np.asarray(p2[name]["master"]))
         assert (p2[name]["scales"].shape[-1]
                 == lo.global_shape()[-1] // 32)
-        want, _ = quantize_blockwise(jnp.asarray(p2[name]["master"]), 32)
+        # compare through the execution engine: rebuild requantizes via
+        # ops.quantize, whose jit-regime scale (reciprocal-multiply) can
+        # differ from the eager reference by 1 ulp on absmax elements
+        want, _ = ops.quantize(jnp.asarray(p2[name]["master"]), 32)
         np.testing.assert_array_equal(np.asarray(want),
                                       np.asarray(p2[name]["codes"]))
 

@@ -6,6 +6,7 @@ import pytest
 
 from repro.configs import build_model, get_config
 from repro.core.fsdp import FSDPRuntime
+from repro.core.schedule import APPROX_VARIANTS, CommSchedule
 from repro.launch.mesh import make_local_mesh
 from repro.serve.engine import Request, ServeEngine
 
@@ -66,3 +67,41 @@ def test_engine_matches_straightline(setup):
     eng.run()
     for r, w in zip(reqs, want):
         assert r.out == w, (r.out, w)
+
+
+def test_quant_matmul_serve_tracks_dense_q8():
+    """serve_quant_matmul keeps eligible q8_block weights as int8 through
+    the matmuls (ops.q8_matmul) instead of dequantizing every gather.  The
+    only new error vs the dense-dequant q8 serve is the per-row activation
+    quantization, so prefill logits must stay close (ALLCLOSE parity
+    class) and the engine must still complete requests."""
+    cfg = get_config("gemma2-2b").reduced()
+    model = build_model(cfg)
+
+    def prefill_logits(sched):
+        rt = FSDPRuntime(model, MESH, schedule=sched)
+        params = rt.init_params(0)
+        cache = model.init_cache(2, 32)
+        rng = np.random.default_rng(0)
+        batch = {"tokens": jnp.asarray(
+            rng.integers(0, cfg.vocab, (2, 8)), jnp.int32)}
+        logits, _ = rt.make_prefill_step()(params, batch, cache)
+        return rt, params, np.asarray(logits, np.float32)
+
+    _, _, dense = prefill_logits(CommSchedule(param_store="q8_block"))
+    rt, params, quant = prefill_logits(APPROX_VARIANTS["q8_serve_matmul"])
+    err = np.linalg.norm(quant - dense) / np.linalg.norm(dense)
+    assert err < 0.15, err
+    # the schedule knob survives the policy/plan round-trip
+    assert rt.schedule.serve_quant_matmul
+
+    eng = ServeEngine(rt, model, params, pool=2, max_len=64)
+    rng = np.random.default_rng(2)
+    reqs = [Request(uid=i, prompt=rng.integers(0, cfg.vocab, (3 + i,)).astype(
+        np.int32), max_new=4) for i in range(3)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+    for r in reqs:
+        assert r.done and len(r.out) == 4
+        assert all(0 <= t < cfg.vocab for t in r.out)
