@@ -1,0 +1,107 @@
+"""Peak-host-memory / wall-time benchmark for offline resharding.
+
+The claim under test (ISSUE: elastic resharding): ``tools/reshard.py``
+streams tensor-by-tensor through two shard indices, so peak host memory is
+bounded by the largest single logical tensor -- NOT by the largest layer
+stack (n_layers x payload), which is what a naive "unpack everything,
+repack everything" reshard would hold.
+
+    PYTHONPATH=src python benchmarks/bench_reshard.py [--arch qwen2.5-14b]
+
+Writes ``BENCH_reshard.json`` at the repo root.  tracemalloc sees numpy's
+allocator, so transient full-tensor assemblies are counted; the npy shard
+files on both sides are memory-mapped and do not.
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
+
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+import pathlib  # noqa: E402
+import sys  # noqa: E402
+import tempfile  # noqa: E402
+import time  # noqa: E402
+import tracemalloc  # noqa: E402
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "src"))
+sys.path.insert(0, str(REPO))
+
+from repro.configs import build_model, get_config  # noqa: E402
+from repro.configs.base import ParallelConfig  # noqa: E402
+from repro.core.fsdp import FSDPRuntime  # noqa: E402
+from repro.core.policy import make_plan  # noqa: E402
+from repro.core.reshard import GroupIndex  # noqa: E402
+from repro.checkpoint import ckpt  # noqa: E402
+from repro.launch.mesh import make_local_mesh  # noqa: E402
+from tools.reshard import reshard  # noqa: E402
+
+
+def tensor_and_stack_bytes(rt) -> tuple[int, int]:
+    """(largest single logical tensor, largest per-group layer stack)."""
+    t_max = s_max = 0
+    for lo in rt.layouts.values():
+        idx = GroupIndex.from_layout(lo)
+        for name in lo.plan.names:
+            n = 1
+            for d in idx.full_shape(name):
+                n *= d
+            t_max = max(t_max, 4 * n)
+        s_max = max(s_max,
+                    4 * (lo.n_layers or 1) * lo.outer_size * lo.plan.total)
+    return t_max, s_max
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-14b")
+    ap.add_argument("--out", default=str(REPO / "BENCH_reshard.json"))
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    cfg = dataclasses.replace(
+        cfg, parallel=ParallelConfig(("data",), ("data",)))
+    model = build_model(cfg)
+    rt8 = FSDPRuntime(model, make_local_mesh(8, 1))
+    largest_tensor, largest_stack = tensor_and_stack_bytes(rt8)
+
+    with tempfile.TemporaryDirectory() as td:
+        src, dst = pathlib.Path(td) / "c8", pathlib.Path(td) / "c4"
+        params = rt8.init_params(0)
+        ckpt.save(src, rt8, params, step=0)
+        del params
+
+        plan4 = make_plan(build_model(cfg), {"data": 4, "model": 1}, None)
+        tracemalloc.start()
+        t0 = time.perf_counter()
+        summary = reshard(src, dst, plan4, verbose=False)
+        wall = time.perf_counter() - t0
+        _, peak = tracemalloc.get_traced_memory()
+        tracemalloc.stop()
+
+    result = {
+        "arch": cfg.name,
+        "direction": "8-way -> 4-way",
+        "streamed_groups": sorted(summary["streamed"]),
+        "peak_host_bytes": int(peak),
+        "wall_s": round(wall, 3),
+        "largest_tensor_bytes": int(largest_tensor),
+        "largest_stack_bytes": int(largest_stack),
+        "peak_over_tensor": round(peak / largest_tensor, 2),
+        "peak_over_stack": round(peak / largest_stack, 3),
+        "bounded_by_tensor": bool(peak < largest_stack),
+    }
+    pathlib.Path(args.out).write_text(json.dumps(result, indent=2) + "\n")
+    print(json.dumps(result, indent=2))
+    if not result["bounded_by_tensor"]:
+        print("WARNING: peak host memory exceeded the layer-stack bound",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

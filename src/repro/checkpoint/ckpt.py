@@ -3,9 +3,38 @@
 The paper (§4) inherits DTensor-based distributed checkpointing; the JAX
 analogue: each group's flat buffer is saved alongside the plan's
 ``checkpoint_index`` (name -> shape/dtype/granularity/offset).  Save is a
-pure local write per shard (no collectives); load can resharded-restore
-into a *different* mesh/plan by round-tripping through per-tensor arrays --
-that is what RaggedShard's metadata buys.
+pure local write per shard (no collectives); load resharded-restores into a
+*different* mesh/plan/TP-degree/store-format by streaming tensors through
+the per-tensor shard index (``core.reshard``).
+
+Format v2 (this module writes; both versions load):
+
+  * ``meta.json``   -- {"version": 2, "step", "groups": {...}, "opt": [...]}
+                       where each group entry carries the checkpoint index
+                       plus layout (shard_size/num_shards/outer_size/
+                       outer_dims/n_layers/mode) and store (store/
+                       quant_block/ef_m) fields, and "opt" is the optimizer
+                       leaf manifest.
+  * ``plan.json``   -- the resolved ShardingPlan (exact-restore validation).
+  * ``shards/``     -- one ``.npy`` per (group, leaf, uniform shard):
+                       ``p__<group>__<leaf>__<j>.npy`` holds shard
+                       ``j = part*m + k`` of that leaf, shaped
+                       ``(n_layers, S_leaf)`` or ``(S_leaf,)``.  Optimizer
+                       leaves save as ``o__<i>__<j>.npy`` (buffer-shaped:
+                       moments, 8-bit codes/scales) or ``o__<i>.npy``
+                       (dense scalars; Shampoo factors, stored *unpadded*
+                       so they are plan-independent).
+
+Save stays a pure local write per shard.  Load addresses individual extents
+via ``GroupIndex``, so cross-plan restores never materialize more than one
+group buffer (and ``tools/reshard.py``, file-to-file, never more than one
+tensor).  Parity classes (DESIGN.md §Resharding): same-plan = bitwise per
+leaf; cross-plan = bitwise-on-master; cross-format = master-exact, codes
+requantized from the master, EF residuals re-zeroed.
+
+Format v1 (legacy, read-only): one monolithic ``state.npz``.  Restores
+same-plan; a cross-plan load with optimizer state raises (the old code
+silently device_put stale same-plan arrays).
 """
 from __future__ import annotations
 
@@ -16,119 +45,271 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import compat
 from ..compat import tree_flatten_with_path, tree_unflatten
 from ..core.ragged import checkpoint_index
+from ..core.reshard import (GroupIndex, buffer_reader, buffer_writer,
+                            copy_tensor, stream_tensors)
+
+
+# --------------------------------------------------------------------------- #
+# dtype widening: .npy round-trips numpy-native dtypes only
+# --------------------------------------------------------------------------- #
+
+def _nonnative_names() -> set[str]:
+    names = {"bfloat16"}
+    names.update(str(jnp.dtype(d)) for d in compat.float8_dtypes().values())
+    return names
+
+
+def _savable(a) -> np.ndarray:
+    """numpy persists native dtypes only: ml_dtypes bfloat16 (and the fp8
+    wire dtypes when present) degrade to raw void arrays on load.  Widen
+    them to fp32 on disk (exact; the store format in meta says what to
+    narrow back to)."""
+    a = np.asarray(a)
+    if a.dtype.kind == "V" or str(a.dtype) in _nonnative_names():
+        return np.asarray(jnp.asarray(a).astype(jnp.float32))
+    return a
+
+
+def _narrow(a: np.ndarray, dtype) -> np.ndarray:
+    """Undo ``_savable``: cast back to the runtime dtype (exact for the
+    widened formats: every bf16/fp8 value is fp32-representable)."""
+    if np.dtype(a.dtype) == jnp.dtype(dtype):
+        return a
+    return np.asarray(jnp.asarray(a).astype(dtype))
+
+
+# --------------------------------------------------------------------------- #
+# shard-file naming and access
+# --------------------------------------------------------------------------- #
+
+def param_shard_file(group: str, leaf: str, j: int) -> str:
+    return f"p__{group}__{leaf}__{j}.npy"
+
+
+def opt_shard_file(file: str, j: int) -> str:
+    return f"{file}__{j}.npy"
+
+
+def shard_file_reader(shards_dir, name_of_j):
+    """A ``core.reshard`` Reader over per-shard ``.npy`` files, memmapped
+    so assembling one tensor touches only that tensor's extents."""
+    shards_dir = pathlib.Path(shards_dir)
+    cache: dict[int, np.ndarray] = {}
+
+    def read(j: int, layer):
+        mm = cache.get(j)
+        if mm is None:
+            f = shards_dir / name_of_j(j)
+            if not f.exists():
+                raise ValueError(f"checkpoint shard file missing: {f}")
+            mm = cache[j] = np.load(f, mmap_mode="r")
+        return mm if layer is None else mm[layer]
+
+    return read
+
+
+def group_master_reader(shards_dir, group: str):
+    """Reader over a group's fp32(-widened) master shards (every store
+    format saves a ``master`` leaf under v2 -- bare states via
+    ``ParamStore.as_leaves``)."""
+    return shard_file_reader(
+        shards_dir, lambda j: param_shard_file(group, "master", j))
+
+
+# --------------------------------------------------------------------------- #
+# save (format v2)
+# --------------------------------------------------------------------------- #
+
+def group_meta(lo) -> dict:
+    return {
+        "index": checkpoint_index(lo.plan),
+        "shard_size": lo.plan.shard_size,
+        "num_shards": lo.plan.num_shards,
+        "outer_size": lo.outer_size,
+        "outer_dims": {n: sd.dim for n, sd in lo.gdef.outer.items()},
+        "n_layers": lo.n_layers,
+        "mode": lo.plan.mode,
+        "store": lo.store.fmt,
+        "quant_block": lo.store.block,
+        # reduce-wire error-feedback residual chunks (0 = none); the
+        # residual checkpoints alongside the weights so EF history
+        # survives restarts
+        "ef_m": lo.store.ef_m,
+    }
+
+
+def _classify_opt_leaf(runtime, keys: tuple[str, ...],
+                       shape: tuple[int, ...]):
+    """(kind, group, div) of one optimizer-state leaf.
+
+    ``buffer``: shaped like a group buffer with the last dim divided by
+    ``div`` (moments, 8-bit moment codes at div=1, their scales at
+    div=quant_block) -- reshards through the extent map.  ``factor``:
+    Shampoo/Muon per-layer stats keyed ``<group>/<tensor>/...``, stacked
+    over the group's (FSDP-padded) layer dim -- plan-independent once
+    unpadded.  ``dense``: everything else, saved whole.
+    """
+    shape = tuple(shape)
+    last = keys[-1]
+    lo = runtime.layouts.get(last)
+    if lo is not None and shape:
+        gs = lo.global_shape()
+        if (shape[:-1] == tuple(gs[:-1])
+                and shape[-1] and gs[-1] % shape[-1] == 0):
+            return "buffer", last, gs[-1] // shape[-1]
+    if "/" in last:
+        g = last.split("/", 1)[0]
+        lo = runtime.layouts.get(g)
+        if (lo is not None and lo.n_layers and len(shape) >= 1
+                and shape[0] >= lo.n_layers):
+            return "factor", g, None
+    return "dense", None, None
 
 
 def save(path, runtime, params, opt_state=None, step: int = 0):
     path = pathlib.Path(path)
-    path.mkdir(parents=True, exist_ok=True)
+    shards = path / "shards"
+    shards.mkdir(parents=True, exist_ok=True)
     meta = {
+        "version": 2,
         "step": int(step),
-        "groups": {
-            name: {
-                "index": checkpoint_index(lo.plan),
-                "shard_size": lo.plan.shard_size,
-                "num_shards": lo.plan.num_shards,
-                "outer_size": lo.outer_size,
-                "n_layers": lo.n_layers,
-                "mode": lo.plan.mode,
-                "store": lo.store.fmt,
-                "quant_block": lo.store.block,
-                # reduce-wire error-feedback residual chunks (0 = none);
-                # the residual checkpoints alongside the weights so EF
-                # history survives restarts
-                "ef_m": lo.store.ef_m,
-            }
-            for name, lo in runtime.layouts.items()
-        },
+        "groups": {name: group_meta(lo)
+                   for name, lo in runtime.layouts.items()},
     }
+    for name, lo in runtime.layouts.items():
+        leaves = lo.store.as_leaves(params[name])
+        rows = lo.outer_size * lo.plan.num_shards
+        for leaf, arr in leaves.items():
+            a = _savable(arr)
+            sl = a.shape[-1] // rows
+            for j in range(rows):
+                np.save(shards / param_shard_file(name, leaf, j),
+                        a[..., j * sl: (j + 1) * sl])
+    manifest = []
+    if opt_state is not None:
+        flat, _ = tree_flatten_with_path(opt_state)
+        for i, (kp, v) in enumerate(flat):
+            keys = tuple(getattr(p, "key", str(p)) for p in kp)
+            a = _savable(v)
+            kind, g, div = _classify_opt_leaf(runtime, keys, a.shape)
+            ent = {"path": list(keys), "kind": kind,
+                   "dtype": str(jnp.dtype(np.asarray(v).dtype)),
+                   "file": f"o__{i:03d}"}
+            if kind == "buffer":
+                lo = runtime.layouts[g]
+                rows = lo.outer_size * lo.plan.num_shards
+                sl = a.shape[-1] // rows
+                ent.update(group=g, div=div)
+                for j in range(rows):
+                    np.save(shards / opt_shard_file(ent["file"], j),
+                            a[..., j * sl: (j + 1) * sl])
+            elif kind == "factor":
+                lo = runtime.layouts[g]
+                ent.update(group=g, n_layers=lo.n_layers)
+                # strip the FSDP layer padding: padded rows are exactly
+                # zero, so the unpadded stat is plan-independent
+                np.save(shards / f"{ent['file']}.npy", a[: lo.n_layers])
+            else:
+                np.save(shards / f"{ent['file']}.npy", a)
+            manifest.append(ent)
+    meta["opt"] = manifest
     (path / "meta.json").write_text(json.dumps(meta, indent=1))
     # the resolved ShardingPlan rides along for exact-restore validation:
     # load_plan(path).dumps() == runtime.plan.dumps() guarantees the
     # bitwise per-leaf restore path applies to every group
     (path / "plan.json").write_text(
         json.dumps(runtime.plan.to_json(), sort_keys=True, indent=1))
-    # flat stores save one array per group (the seed's format); dict states
-    # (q8_block) save one array per leaf: param__<group>__<leaf>
-    arrays = {}
-    for k, v in params.items():
-        if isinstance(v, dict):
-            for leaf, a in v.items():
-                arrays[f"param__{k}__{leaf}"] = _savable(a)
-        else:
-            arrays[f"param__{k}"] = _savable(v)
-    if opt_state is not None:
-        flat, _ = tree_flatten_with_path(opt_state)
-        for kp, v in flat:
-            key = "opt__" + "__".join(
-                getattr(p, "key", str(p)) for p in kp)
-            arrays[key] = _savable(v)
-    np.savez(path / "state.npz", **arrays)
 
 
-def _savable(a) -> np.ndarray:
-    """np.savez round-trips numpy-native dtypes only: ml_dtypes bfloat16
-    degrades to a raw void ('|V2') array on load.  Widen bf16 to fp32 on
-    disk (exact; the store format in meta says what to narrow back to)."""
-    a = np.asarray(a)
-    if a.dtype.kind == "V" or str(a.dtype) == "bfloat16":
-        return np.asarray(jnp.asarray(a).astype(jnp.float32))
-    return a
+# --------------------------------------------------------------------------- #
+# load (v2 streaming; v1 legacy below)
+# --------------------------------------------------------------------------- #
+
+def _same_layout(saved: dict, lo) -> bool:
+    """Shard bytes are directly reusable iff every layout field AND the
+    full placement index match (same shapes in a different packing must
+    take the remap path)."""
+    return (saved["shard_size"] == lo.plan.shard_size
+            and saved["num_shards"] == lo.plan.num_shards
+            and saved.get("outer_size", 1) == lo.outer_size
+            and {k: int(v) for k, v in saved.get("outer_dims", {}).items()}
+            == {n: sd.dim for n, sd in lo.gdef.outer.items()}
+            and saved.get("n_layers", 0) == lo.n_layers
+            and saved.get("mode", "ragged") == lo.plan.mode
+            and saved["index"] == checkpoint_index(lo.plan))
+
+
+def _same_store(saved: dict, lo) -> bool:
+    saved_store = saved.get("store", "fp32")
+    return (saved_store == lo.store.fmt
+            and saved.get("ef_m", 0) == lo.store.ef_m
+            and (not (lo.store.quantized or lo.store.has_ef)
+                 or saved.get("quant_block") == lo.store.block))
 
 
 def load(path, runtime, opt_state_like=None):
     """Restore params (+ optionally opt state) onto the runtime's mesh.
 
-    If the saved plan AND store format match the runtime's, buffers load
-    leaf-by-leaf directly (bitwise: a q8_block round-trip preserves the
-    master shard and the codes exactly).  Otherwise the fp32 master is
-    reconstructed from the saved state, re-extracted via the saved index
-    and re-packed with the current plan if the plans differ, and the
-    runtime's store re-derives its state from it (resharded and/or
-    re-formatted restore: codes are requantized from the master, which is
-    exact because align pins every tensor start to the quant block)."""
+    If a group's saved layout AND store format match the runtime's, its
+    shard files concatenate straight back into the buffer (bitwise: a
+    q8_block round-trip preserves the master shard and the codes exactly).
+    Otherwise the fp32 master is streamed tensor-by-tensor through the
+    saved and live shard indices -- any mesh size, plan mode, TP degree
+    (tensors are looked up by name, so migrating between groups across a
+    TP change is handled), or store format -- and the runtime's store
+    re-derives its state (codes requantized from the master, which is
+    bitwise-reproducible because align pins tensor starts and S to the
+    quant block; EF residuals restart at zero).
+
+    Optimizer state reshards through the same machinery: moment buffers
+    follow their parameter's extents (block-granular 8-bit state moves on
+    the aligned path and raises on an outer-layout change), Shampoo/Muon
+    per-layer factors are re-padded to the new plan, dense leaves load
+    verbatim.
+    """
     from jax.sharding import NamedSharding
 
     path = pathlib.Path(path)
     meta = json.loads((path / "meta.json").read_text())
-    data = np.load(path / "state.npz")
+    if int(meta.get("version", 1)) < 2:
+        return _load_legacy(path, meta, runtime, opt_state_like)
+    shards = path / "shards"
+    saved_groups = meta["groups"]
+    src_idx = {g: GroupIndex.from_meta(sg) for g, sg in saved_groups.items()}
+    tensor_src = {t: g for g, sg in saved_groups.items() for t in sg["index"]}
+
     params = {}
     for name, lo in runtime.layouts.items():
-        saved = meta["groups"][name]
-        saved_store = saved.get("store", "fp32")  # pre-store checkpoints
-        same_plan = (
-            saved["shard_size"] == lo.plan.shard_size
-            and saved["num_shards"] == lo.plan.num_shards
-            and saved["outer_size"] == lo.outer_size
-            and saved["mode"] == lo.plan.mode
-        )
         sharding = NamedSharding(runtime.mesh, lo.pspec())
-        same_store = (
-            saved_store == lo.store.fmt
-            and saved.get("ef_m", 0) == lo.store.ef_m
-            and (not (lo.store.quantized or lo.store.has_ef)
-                 or saved.get("quant_block") == lo.store.block))
-        keys = lo.store.state_keys()
-        if same_plan and same_store:
-            if keys is not None:
-                # dict states (q8 and/or EF residual) restore per leaf;
-                # bf16 leaves were widened to fp32 on disk (_savable) --
-                # narrow back to the leaf dtype, an exact round-trip
-                state = {
-                    leaf: np.asarray(
-                        jnp.asarray(data[f"param__{name}__{leaf}"])
-                        .astype(lo.store.leaf_dtype(leaf)))
-                    for leaf in keys}
-            else:
-                state = np.asarray(
-                    jnp.asarray(data[f"param__{name}"])
-                    .astype(lo.store.storage_dtype))
+        saved = saved_groups.get(name)
+        if saved is not None and _same_layout(saved, lo) \
+                and _same_store(saved, lo):
+            keys = lo.store.state_keys() or ("master",)
+            leaves = {}
+            for leaf in keys:
+                rows = lo.outer_size * lo.plan.num_shards
+                parts = [np.load(shards / param_shard_file(name, leaf, j))
+                         for j in range(rows)]
+                leaves[leaf] = _narrow(np.concatenate(parts, axis=-1),
+                                       lo.store.leaf_dtype(leaf))
+            state = lo.store.from_leaves(leaves)
         else:
-            master = _saved_master(data, name, saved_store,
-                                   saved.get("ef_m", 0))
-            if not same_plan:
-                master = _repack(master, saved, lo)
+            dst_idx = GroupIndex.from_layout(lo)
+            master = np.zeros(lo.global_shape(), np.float32)
+            write = buffer_writer(master, dst_idx.num_rows)
+
+            def lookup(tname):
+                g = tensor_src.get(tname)
+                if g is None:
+                    raise ValueError(
+                        f"tensor {tname!r} (group {name!r}) not in "
+                        f"checkpoint {path}")
+                return src_idx[g], group_master_reader(shards, g)
+
+            stream_tensors(dst_idx, write, lookup)
             # cross-plan/format rebuild: EF residuals restart at zero (a
             # fresh error-feedback history is always valid)
             state = lo.store.create(master)
@@ -136,13 +317,105 @@ def load(path, runtime, opt_state_like=None):
             lambda a: jax.device_put(a, sharding), state)
     out = [params, int(meta["step"])]
     if opt_state_like is not None:
-        flat, tree = tree_flatten_with_path(opt_state_like)
-        restored = []
-        for kp, like in flat:
-            key = "opt__" + "__".join(getattr(p, "key", str(p)) for p in kp)
-            restored.append(jax.device_put(data[key], like.sharding))
-        out.append(tree_unflatten(tree, restored))
+        out.append(_load_opt(shards, meta, runtime, opt_state_like,
+                             src_idx, tensor_src))
     return tuple(out)
+
+
+def _load_opt(shards, meta, runtime, opt_state_like, src_idx, tensor_src):
+    man = {tuple(e["path"]): e for e in meta.get("opt", [])}
+    flat, tree = tree_flatten_with_path(opt_state_like)
+    restored = []
+    for kp, like in flat:
+        keys = tuple(getattr(p, "key", str(p)) for p in kp)
+        leaf = _restore_opt_leaf(shards, man, keys, like, runtime,
+                                 src_idx, tensor_src)
+        restored.append(jax.device_put(leaf, like.sharding))
+    return tree_unflatten(tree, restored)
+
+
+def _restore_opt_leaf(shards, man, keys, like, runtime, src_idx, tensor_src):
+    pathname = "/".join(keys)
+    kind, g_new, div = _classify_opt_leaf(runtime, keys, like.shape)
+    ent = man.get(keys)
+    if kind != "buffer":
+        if ent is None:
+            raise ValueError(
+                f"optimizer state leaf {pathname!r} not in checkpoint "
+                f"(saved leaves: {sorted('/'.join(p) for p in man)})")
+        a = np.load(shards / f"{ent['file']}.npy")
+        if kind == "factor":
+            lo = runtime.layouts[g_new]
+            if a.shape[1:] != like.shape[1:] or a.shape[0] < lo.n_layers:
+                raise ValueError(
+                    f"optimizer state {pathname!r}: saved factor shape "
+                    f"{a.shape} incompatible with {tuple(like.shape)}")
+            out = np.zeros(like.shape, a.dtype)
+            out[: lo.n_layers] = a[: lo.n_layers]
+            a = out
+        elif tuple(a.shape) != tuple(like.shape):
+            raise ValueError(
+                f"optimizer state {pathname!r}: saved shape {a.shape} != "
+                f"expected {tuple(like.shape)}")
+        return _narrow(a, like.dtype)
+
+    lo = runtime.layouts[g_new]
+    dst_idx = GroupIndex.from_layout(lo)
+    if ent is not None and ent["kind"] == "buffer" \
+            and ent.get("div") == div \
+            and g_new in src_idx and _same_layout_idx(src_idx[g_new], dst_idx):
+        read = shard_file_reader(
+            shards, lambda j: opt_shard_file(ent["file"], j))
+        parts = [np.asarray(read(j, None)) for j in range(dst_idx.num_rows)]
+        return _narrow(np.concatenate(parts, axis=-1), like.dtype)
+
+    # cross-plan: each tensor's slice of the moment buffer follows the
+    # parameter's extents from its saved owning group
+    dest = None
+    for name in lo.plan.names:
+        g_old = tensor_src.get(name)
+        if g_old is None:
+            raise ValueError(
+                f"optimizer state {pathname!r}: tensor {name!r} not in "
+                f"checkpoint")
+        src_ent = man.get(keys[:-1] + (g_old,))
+        if src_ent is None or src_ent["kind"] != "buffer":
+            raise ValueError(
+                f"optimizer state {pathname!r}: no saved buffer leaf for "
+                f"source group {g_old!r} "
+                f"(expected path {'/'.join(keys[:-1] + (g_old,))!r})")
+        if src_ent.get("div") != div:
+            raise ValueError(
+                f"optimizer state {pathname!r}: block granularity changed "
+                f"({src_ent.get('div')} -> {div}, e.g. a quant_block "
+                f"change); 8-bit optimizer state cannot be resharded "
+                f"across it — reinitialize the optimizer instead")
+        read = shard_file_reader(
+            shards, lambda j, f=src_ent["file"]: opt_shard_file(f, j))
+        if dest is None:
+            probe = np.asarray(read(0, 0 if lo.n_layers else None))
+            dest = np.zeros(like.shape, probe.dtype)
+        write = buffer_writer(dest, dst_idx.num_rows)
+        s_idx = src_idx[g_old]
+        if (s_idx.n_layers or 0) != (lo.n_layers or 0):
+            raise ValueError(
+                f"optimizer state {pathname!r}: layer count changed for "
+                f"{name!r} ({s_idx.n_layers} -> {lo.n_layers})")
+        aligned = div > 1 or np.dtype(like.dtype).kind in "iu"
+        for li in (range(lo.n_layers) if lo.n_layers else [None]):
+            copy_tensor(s_idx, dst_idx, name, read, write,
+                        layer=li, div=div, aligned=aligned)
+    return _narrow(dest, like.dtype)
+
+
+def _same_layout_idx(a: GroupIndex, b: GroupIndex) -> bool:
+    return (a.plan.shard_size == b.plan.shard_size
+            and a.plan.num_shards == b.plan.num_shards
+            and a.outer_size == b.outer_size
+            and dict(a.outer_dims) == dict(b.outer_dims)
+            and (a.n_layers or 0) == (b.n_layers or 0)
+            and a.plan.mode == b.plan.mode
+            and checkpoint_index(a.plan) == checkpoint_index(b.plan))
 
 
 def load_plan(path):
@@ -160,9 +433,74 @@ def load_plan(path):
     return ShardingPlan.from_json(json.loads(f.read_text()))
 
 
+# --------------------------------------------------------------------------- #
+# legacy format v1 (monolithic state.npz) -- read-only
+# --------------------------------------------------------------------------- #
+
+def _load_legacy(path, meta, runtime, opt_state_like):
+    from jax.sharding import NamedSharding
+
+    data = np.load(path / "state.npz")
+    params = {}
+    any_cross_plan = None
+    for name, lo in runtime.layouts.items():
+        saved = meta["groups"][name]
+        saved_store = saved.get("store", "fp32")  # pre-store checkpoints
+        same_plan = (
+            saved["shard_size"] == lo.plan.shard_size
+            and saved["num_shards"] == lo.plan.num_shards
+            and saved.get("outer_size", 1) == lo.outer_size
+            and saved.get("mode", "ragged") == lo.plan.mode
+        )
+        sharding = NamedSharding(runtime.mesh, lo.pspec())
+        same_store = _same_store(saved, lo)
+        keys = lo.store.state_keys()
+        if same_plan and same_store:
+            if keys is not None:
+                state = {
+                    leaf: np.asarray(
+                        jnp.asarray(data[f"param__{name}__{leaf}"])
+                        .astype(lo.store.leaf_dtype(leaf)))
+                    for leaf in keys}
+            else:
+                state = np.asarray(
+                    jnp.asarray(data[f"param__{name}"])
+                    .astype(lo.store.storage_dtype))
+        else:
+            if not same_plan:
+                any_cross_plan = name
+            master = _saved_master(data, name, saved_store,
+                                   saved.get("ef_m", 0))
+            if not same_plan:
+                master = _repack(master, saved, lo)
+            state = lo.store.create(master)
+        params[name] = jax.tree.map(
+            lambda a: jax.device_put(a, sharding), state)
+    out = [params, int(meta["step"])]
+    if opt_state_like is not None:
+        if any_cross_plan is not None:
+            raise ValueError(
+                f"legacy (v1) checkpoint: group {any_cross_plan!r} was "
+                f"saved under a different plan; v1 optimizer state is "
+                f"same-plan only (the old code silently restored stale "
+                f"arrays here).  Re-save under format v2 or load without "
+                f"opt_state_like")
+        flat, tree = tree_flatten_with_path(opt_state_like)
+        restored = []
+        for kp, like in flat:
+            key = "opt__" + "__".join(getattr(p, "key", str(p)) for p in kp)
+            if key not in data:
+                raise ValueError(
+                    f"optimizer state leaf {key!r} not in legacy "
+                    f"checkpoint {path}")
+            restored.append(jax.device_put(data[key], like.sharding))
+        out.append(tree_unflatten(tree, restored))
+    return tuple(out)
+
+
 def _saved_master(data, name: str, saved_store: str,
                   saved_ef_m: int = 0) -> np.ndarray:
-    """fp32 master weights of one group from a saved state of any format
+    """fp32 master weights of one group from a saved v1 state of any format
     (dict states -- quantized and/or EF-carrying -- save a master leaf)."""
     if saved_store == "q8_block" or saved_ef_m:
         return np.asarray(data[f"param__{name}__master"], np.float32)
@@ -170,13 +508,14 @@ def _saved_master(data, name: str, saved_store: str,
 
 
 def _repack(buf: np.ndarray, saved: dict, lo) -> np.ndarray:
-    """Cross-plan restore: unpack tensors via the saved index, re-pack with
-    the current plan.  Only same outer_size is supported (TP regrouping
-    would need the StridedRagged reshuffle)."""
-    if saved["outer_size"] != lo.outer_size:
+    """v1 cross-plan restore: unpack tensors via the saved index, re-pack
+    with the current plan.  Only same outer_size is supported here; the v2
+    path (``core.reshard``) handles TP regrouping."""
+    if saved.get("outer_size", 1) != lo.outer_size:
         raise ValueError(
-            f"cross-TP restore not supported: checkpoint outer_size "
-            f"{saved['outer_size']} != runtime {lo.outer_size}")
+            f"legacy cross-TP restore not supported: checkpoint outer_size "
+            f"{saved.get('outer_size', 1)} != runtime {lo.outer_size}; "
+            f"re-save under format v2")
     idx = saved["index"]
     old_total = saved["shard_size"] * saved["num_shards"]
     layers = buf.reshape((-1, lo.outer_size * old_total))

@@ -240,6 +240,189 @@ class FSDPRuntime:
         return params
 
     # ------------------------------------------------------------------ #
+    # in-job elastic resharding (ROADMAP #4)
+    # ------------------------------------------------------------------ #
+    def replan(self, params, opt_state=None, *, mesh: Mesh | None = None,
+               model=None, plan: ShardingPlan | None = None, policies=None,
+               schedule=None, group_schedules=None, planner: str | None = None,
+               optimizer=None):
+        """Re-plan in place: a new mesh / policies / TP degree without a
+        save/load round trip.  Returns ``(new_runtime, new_params,
+        new_opt_state)`` (``new_opt_state`` is None unless ``opt_state``
+        and ``optimizer`` are given).
+
+        ``plan.diff`` (via ``policy.layout_changed_groups``) splits the
+        groups: unchanged layout+store moves bitwise as raw shard bytes
+        (EF history included); changed groups stream their fp32 master
+        tensor-by-tensor through the extent map and rebuild their store
+        state (codes requantized, EF re-zeroed) — the same parity classes
+        as a checkpoint reshard, minus the disk."""
+        from ..compat import tree_flatten_with_path, tree_unflatten
+        from .policy import layout_changed_groups
+        from .reshard import (GroupIndex, buffer_reader, buffer_writer,
+                              stream_tensors)
+
+        model = model if model is not None else self.model
+        mesh = mesh if mesh is not None else self.mesh
+        kwargs: dict[str, Any] = {}
+        if plan is not None:
+            kwargs["plan"] = plan
+        elif policies is not None:
+            kwargs["policies"] = policies
+        elif schedule is not None or group_schedules is not None:
+            kwargs["schedule"] = schedule
+            kwargs["group_schedules"] = group_schedules
+        elif model is self.model:
+            # same model: keep this runtime's resolved per-group decisions
+            kwargs["policies"] = self.plan.policy_set()
+        # else: a new model (e.g. changed TP degree) lowers its own
+        # ParallelConfig knobs
+        new_rt = FSDPRuntime(
+            model, mesh, planner=planner or self.planner_mode,
+            compute_dtype=self.compute_dtype, donate=self.donate,
+            scan_unroll=self.scan_unroll, **kwargs)
+
+        changed = layout_changed_groups(self.plan, new_rt.plan)
+        old_idx = {n: GroupIndex.from_layout(lo)
+                   for n, lo in self.layouts.items()}
+        tensor_src = {t: n for n, lo in self.layouts.items()
+                      for t in lo.plan.names}
+        # lazily-pulled host masters of changed source groups (one at a
+        # time would be even leaner, but group granularity matches the
+        # device_put batching below)
+        masters: dict[str, np.ndarray] = {}
+
+        def src_master(gname: str) -> np.ndarray:
+            m = masters.get(gname)
+            if m is None:
+                state = params[gname]
+                if isinstance(state, dict):
+                    m = np.asarray(state["master"], np.float32)
+                else:
+                    m = np.asarray(
+                        jnp.asarray(state).astype(jnp.float32))
+                masters[gname] = m
+            return m
+
+        new_params = {}
+        for name, lo in new_rt.layouts.items():
+            sharding = NamedSharding(new_rt.mesh, lo.pspec())
+            if name in self.layouts and name not in changed:
+                new_params[name] = jax.tree.map(
+                    lambda a: jax.device_put(np.asarray(a), sharding),
+                    params[name])
+                continue
+            dst = GroupIndex.from_layout(lo)
+            master = np.zeros(lo.global_shape(), np.float32)
+            write = buffer_writer(master, dst.num_rows)
+
+            def lookup(tname):
+                g = tensor_src.get(tname)
+                if g is None:
+                    raise ValueError(
+                        f"tensor {tname!r} (group {name!r}) does not exist "
+                        f"in the current runtime; replan cannot invent "
+                        f"parameters")
+                return old_idx[g], buffer_reader(src_master(g),
+                                                 old_idx[g].num_rows)
+
+            stream_tensors(dst, write, lookup)
+            new_params[name] = jax.tree.map(
+                lambda a: jax.device_put(a, sharding),
+                lo.store.create(master))
+
+        if opt_state is None:
+            return new_rt, new_params, None
+        if optimizer is None:
+            raise ValueError(
+                "replan(opt_state=...) needs optimizer= to shape the new "
+                "state tree")
+        old_flat, _ = tree_flatten_with_path(opt_state)
+        old_by_path = {
+            tuple(getattr(p, "key", str(p)) for p in kp): v
+            for kp, v in old_flat}
+        like_flat, like_tree = tree_flatten_with_path(
+            optimizer.state_shapes(new_rt))
+        moved = []
+        for kp, like in like_flat:
+            keys = tuple(getattr(p, "key", str(p)) for p in kp)
+            moved.append(jax.device_put(
+                self._replan_opt_leaf(new_rt, keys, like, old_by_path,
+                                      old_idx, tensor_src, changed),
+                like.sharding))
+        return new_rt, new_params, tree_unflatten(like_tree, moved)
+
+    def _replan_opt_leaf(self, new_rt, keys, like, old_by_path, old_idx,
+                         tensor_src, changed):
+        from ..checkpoint.ckpt import _classify_opt_leaf
+        from .reshard import GroupIndex, buffer_reader, buffer_writer, \
+            copy_tensor
+
+        pathname = "/".join(keys)
+        kind, g_new, div = _classify_opt_leaf(new_rt, keys, like.shape)
+        if kind != "buffer":
+            old = old_by_path.get(keys)
+            if old is None:
+                raise ValueError(
+                    f"optimizer state leaf {pathname!r} has no counterpart "
+                    f"in the current state")
+            a = np.asarray(old)
+            if kind == "factor":
+                # unpad to the true layer count, repad for the new plan
+                L = self.layouts[g_new].n_layers
+                if a.shape[1:] != like.shape[1:] or like.shape[0] < L:
+                    raise ValueError(
+                        f"optimizer state {pathname!r}: factor shape "
+                        f"{a.shape} incompatible with {tuple(like.shape)}")
+                out = np.zeros(like.shape, a.dtype)
+                out[:L] = a[:L]
+                return out
+            if tuple(a.shape) != tuple(like.shape):
+                raise ValueError(
+                    f"optimizer state {pathname!r}: shape {a.shape} != "
+                    f"expected {tuple(like.shape)}")
+            return a
+        lo = new_rt.layouts[g_new]
+        old = old_by_path.get(keys)
+        if g_new not in changed and old is not None \
+                and tuple(old.shape) == tuple(like.shape):
+            return np.asarray(old)
+        dst = GroupIndex.from_layout(lo)
+        dest = None
+        aligned = div > 1 or jnp.dtype(like.dtype).kind in "iu"
+        for name in lo.plan.names:
+            g_old = tensor_src.get(name)
+            src = old_by_path.get(keys[:-1] + (g_old,)) \
+                if g_old is not None else None
+            if src is None:
+                raise ValueError(
+                    f"optimizer state {pathname!r}: no source buffer for "
+                    f"tensor {name!r} (old group {g_old!r})")
+            src = np.asarray(src)
+            s_idx = old_idx[g_old]
+            src_div = (self.layouts[g_old].global_shape()[-1]
+                       // src.shape[-1])
+            if src_div != div:
+                raise ValueError(
+                    f"optimizer state {pathname!r}: block granularity "
+                    f"changed ({src_div} -> {div}); 8-bit optimizer state "
+                    f"cannot be resharded across it")
+            if dest is None:
+                dest = np.zeros(like.shape, src.dtype)
+            if (s_idx.n_layers or 0) != (lo.n_layers or 0):
+                raise ValueError(
+                    f"optimizer state {pathname!r}: layer count changed "
+                    f"for {name!r} ({s_idx.n_layers} -> {lo.n_layers})")
+            read = buffer_reader(src, s_idx.num_rows)
+            write = buffer_writer(dest, dst.num_rows)
+            for li in (range(lo.n_layers) if lo.n_layers else [None]):
+                copy_tensor(s_idx, dst, name, read, write,
+                            layer=li, div=div, aligned=aligned)
+        return np.asarray(
+            jnp.asarray(dest).astype(like.dtype)) \
+            if jnp.dtype(dest.dtype) != jnp.dtype(like.dtype) else dest
+
+    # ------------------------------------------------------------------ #
     # the ParamGetter handed to model code inside shard_map
     # ------------------------------------------------------------------ #
     def _getter(self, local_bufs: Mapping[str, jax.Array], remat: bool = True,

@@ -347,6 +347,26 @@ def straddled_blocks(plan: GroupPlan) -> int:
     return count
 
 
+def plan_from_checkpoint_index(index: dict, shard_size: int, num_shards: int,
+                               mode: str = "ragged") -> GroupPlan:
+    """Reconstruct a ``GroupPlan`` from a saved checkpoint index
+    (``ragged.checkpoint_index`` output as round-tripped through JSON).
+
+    This is the read half of the plan artifact: an old checkpoint's layout
+    becomes a live plan whose extent map (``GroupPlan.tensor_extents``) can
+    address the saved shard files — no planner run, no array data touched.
+    """
+    placements = []
+    for name, ent in index.items():
+        spec = TensorSpec(name, tuple(int(s) for s in ent["shape"]),
+                          ent.get("dtype", "float32"),
+                          int(ent.get("granularity", 1)))
+        placements.append(Placement(spec, int(ent["offset"])))
+    placements.sort(key=lambda p: p.offset)
+    return GroupPlan(tuple(placements), int(shard_size), int(num_shards),
+                     mode=mode)
+
+
 PLANNERS = {
     "ragged": plan_group,
     "fsdp2": plan_fsdp2,

@@ -297,6 +297,12 @@ class GroupPlanEntry:
     n_layers: Optional[int]
     grad_sync_axes: tuple[str, ...]
     quant_block: int
+    # per-tensor outer (TP/EP) split dims: tensor name -> dim index, for
+    # tensors evenly split over ``outer_axis`` before FSDP packing; a tensor
+    # absent here in an outer_size>1 group is replicated into every outer
+    # part.  Serialized (plan JSON v2) so a restored plan can drive
+    # resharding without the model's GroupDefs.
+    outer_dims: Mapping[str, int] = dataclasses.field(default_factory=dict)
 
     @property
     def fsdp_world(self) -> int:
@@ -444,7 +450,7 @@ class ShardingPlan:
     # ---- serialization --------------------------------------------------- #
     def to_json(self) -> dict:
         return {
-            "version": 1,
+            "version": 2,  # v2 adds per-group "outer_dims"
             "axis_sizes": {a: int(s) for a, s in self.axis_sizes.items()},
             "planner": self.planner,
             "compute_dtype": self.compute_dtype,
@@ -460,6 +466,8 @@ class ShardingPlan:
                     "n_layers": e.n_layers,
                     "outer_axis": e.outer_axis,
                     "outer_size": e.outer_size,
+                    "outer_dims": {k: int(v)
+                                   for k, v in e.outer_dims.items()},
                     "fsdp_axes": list(e.fsdp_axes),
                     "fsdp_axis_sizes": [int(s) for s in e.fsdp_axis_sizes],
                     "grad_sync_axes": list(e.grad_sync_axes),
@@ -507,7 +515,10 @@ class ShardingPlan:
                 outer_axis=g["outer_axis"], outer_size=g["outer_size"],
                 n_layers=g["n_layers"],
                 grad_sync_axes=tuple(g["grad_sync_axes"]),
-                quant_block=g["quant_block"])
+                quant_block=g["quant_block"],
+                # v1 plan files predate outer_dims; absent == no outer split
+                outer_dims={k: int(v)
+                            for k, v in g.get("outer_dims", {}).items()})
         return cls(base=ShardingPolicy(**data["base"]), groups=groups,
                    axis_sizes=dict(data["axis_sizes"]),
                    planner=data["planner"],
@@ -532,6 +543,44 @@ class ShardingPlan:
 
         walk("", self.to_json(), other.to_json())
         return out
+
+
+# fields of a group's JSON entry whose change means the group's *data
+# layout or storage* changed (shards are not movable bitwise); everything
+# else (wire formats, gather modes, accounting) leaves shard bytes intact
+_LAYOUT_FIELDS = frozenset({
+    "shard_size", "num_shards", "mode", "n_layers", "outer_axis",
+    "outer_size", "outer_dims", "fsdp_axes", "fsdp_axis_sizes",
+    "grad_sync_axes", "placements", "quant_block",
+})
+_LAYOUT_POLICY_FIELDS = frozenset({"store", "reduce_wire"})
+
+
+def layout_changed_groups(old: ShardingPlan, new: ShardingPlan) -> set[str]:
+    """Group names whose stored bytes cannot move bitwise from ``old`` to
+    ``new``: the layout (placements/shards/outer split) or the stored
+    format (store fmt, EF presence via reduce_wire) differs.  Built on
+    ``ShardingPlan.diff`` — the elastic paths (``FSDPRuntime.replan``,
+    ``tools/reshard.py``) move every other group as raw shards and route
+    only these through the extent map.  Groups present in only one plan
+    count as changed."""
+    import re
+
+    changed: set[str] = set()
+    changed |= set(old.groups) ^ set(new.groups)
+    pat = re.compile(r"^groups\.([^.]+)\.([^.:]+)")
+    for line in old.diff(new):
+        m = pat.match(line)
+        if not m:
+            continue
+        gname, field = m.group(1), m.group(2)
+        if field in _LAYOUT_FIELDS:
+            changed.add(gname)
+        elif field == "policy":
+            sub = re.match(r"^groups\.[^.]+\.policy\.([^.:]+)", line)
+            if sub and sub.group(1) in _LAYOUT_POLICY_FIELDS:
+                changed.add(gname)
+    return changed & (set(old.groups) | set(new.groups))
 
 
 # --------------------------------------------------------------------------- #
@@ -845,7 +894,9 @@ def plan(model, mesh, policies=None, *, planner: str = "ragged",
             fsdp_axis_sizes=tuple(axis_sizes[a] for a in fsdp_axes),
             outer_axis=outer_axis, outer_size=outer_size,
             n_layers=gdef.n_layers, grad_sync_axes=grad_sync_axes,
-            quant_block=cfg.quant_block)
+            quant_block=cfg.quant_block,
+            outer_dims={s.name: gdef.outer[s.name].dim
+                        for s in gdef.specs if s.name in gdef.outer})
 
     unmatched = [r.selector() for i, r in enumerate(pset.rules)
                  if i not in matched]

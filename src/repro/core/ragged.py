@@ -112,6 +112,41 @@ class LocalPiece:
 
 
 @dataclasses.dataclass(frozen=True)
+class Extent:
+    """One contiguous piece of one tensor inside one uniform shard.
+
+    ``shard`` is the FSDP shard index (0..num_shards); ``[lo, hi)`` indexes
+    that shard's local buffer (size S); ``tensor_lo`` is where the piece
+    begins inside the flat tensor.  A tensor's extents cover it exactly, in
+    flat order -- the per-tensor shard index resharding streams through
+    (see repro.core.reshard): ``tensor[tensor_lo : tensor_lo + hi - lo] ==
+    shards[shard][lo:hi]`` for every extent, under ANY plan mode.
+    """
+
+    shard: int
+    lo: int
+    hi: int
+    tensor_lo: int
+
+    @property
+    def size(self) -> int:
+        return self.hi - self.lo
+
+    def scaled(self, div: int) -> "Extent":
+        """The same extent in ``div``-granular units (e.g. one quant scale
+        per ``div`` elements).  ``lo`` and ``tensor_lo`` must be exact
+        multiples (planner align); ``hi`` rounds up so a tensor's tail
+        partial block keeps its scale."""
+        if self.lo % div or self.tensor_lo % div:
+            raise ValueError(
+                f"extent (shard {self.shard}, lo {self.lo}, tensor_lo "
+                f"{self.tensor_lo}) not aligned to block {div}; this layout "
+                f"cannot carry block-granular state")
+        return Extent(self.shard, self.lo // div, -(-self.hi // div),
+                      self.tensor_lo // div)
+
+
+@dataclasses.dataclass(frozen=True)
 class GroupPlan:
     """Output of the planner for one communication group.
 
@@ -200,6 +235,34 @@ class GroupPlan:
                 )
             )
         return tuple(pieces)
+
+    def tensor_extents(self, name: str) -> tuple[Extent, ...]:
+        """The per-tensor shard index: every ``(shard, lo, hi, tensor_lo)``
+        extent holding tensor ``name`` under this plan, in flat-tensor order.
+
+        Pure placement arithmetic — no array data is touched.  Contiguous
+        modes (ragged/megatron/naive) intersect the tensor interval with the
+        uniform shard windows; fsdp2's interleaved layout yields one extent
+        per shard chunk (matching DBuffer._pack_interleaved).
+        """
+        p = self.placement(name)
+        S, m = self.shard_size, self.num_shards
+        exts: list[Extent] = []
+        if self.mode == "fsdp2":
+            chunk = -(-p.spec.size // m)
+            col = p.offset // m
+            for k in range(m):
+                t_lo = k * chunk
+                n = min((k + 1) * chunk, p.spec.size) - t_lo
+                if n <= 0:
+                    break
+                exts.append(Extent(k, col, col + n, t_lo))
+        else:
+            k0, k1 = p.offset // S, (p.end - 1) // S
+            for k in range(k0, k1 + 1):
+                a, b = max(p.offset, k * S), min(p.end, (k + 1) * S)
+                exts.append(Extent(k, a - k * S, b - k * S, a - p.offset))
+        return tuple(exts)
 
     def blocks_per_device(self) -> list[dict[str, int]]:
         """#blocks of each tensor per device -- the ragged distribution."""

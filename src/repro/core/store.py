@@ -59,6 +59,7 @@ validated by ``CommSchedule.validate_for``; see DESIGN.md §ParamStore and
 from __future__ import annotations
 
 import dataclasses
+from typing import Any, Mapping
 
 import jax
 import jax.numpy as jnp
@@ -187,6 +188,36 @@ class ParamStore:
         if keys is None:
             return pspec
         return {k: pspec for k in keys}
+
+    def leaf_div(self, key: str) -> int:
+        """Buffer elements per leaf element: scales cover ``block``
+        elements; other leaves are 1:1 (EF is 1:1 per its *own* last dim,
+        which is ``ef_m`` x the buffer's — see ``leaf_shard_len``)."""
+        return self.block if key == "scales" else 1
+
+    def leaf_shard_len(self, key: str, shard_size: int) -> int:
+        """Per-uniform-shard length of one state leaf for an FSDP shard of
+        ``shard_size`` buffer elements -- the row length of that leaf's
+        per-shard checkpoint file."""
+        if key == "scales":
+            return shard_size // self.block
+        if key == EF_KEY:
+            return shard_size * self.ef_m
+        return shard_size
+
+    def as_leaves(self, state) -> dict:
+        """Uniform dict view of a state (bare array -> {"master": arr}) --
+        the checkpoint writer iterates leaves without caring about fmt."""
+        if isinstance(state, dict):
+            return dict(state)
+        return {"master": state}
+
+    def from_leaves(self, leaves: Mapping) -> Any:
+        """Inverse of ``as_leaves``: collapse back to a bare array when the
+        format stores one."""
+        if self.state_keys() is None:
+            return leaves["master"]
+        return dict(leaves)
 
     # ------------------------------------------------------------------ #
     # host-side construction (init / checkpoint restore)

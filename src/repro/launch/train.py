@@ -32,6 +32,14 @@ def main():
     ap.add_argument("--optimizer", default=None)
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--resume", action="store_true",
+                    help="restore params/opt state from --ckpt if it exists "
+                         "(any saved plan/mesh/TP degree: cross-plan loads "
+                         "stream through the extent map) and continue from "
+                         "the saved step")
+    ap.add_argument("--tp", type=int, default=0,
+                    help="override the arch config's tensor-parallel degree "
+                         "(requires --model >= the degree)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=5)
     args = ap.parse_args()
@@ -51,6 +59,16 @@ def main():
         cfg = cfg.reduced()
     if args.optimizer:
         cfg = dataclasses.replace(cfg, optimizer=args.optimizer)
+    if args.tp:
+        par = cfg.parallel
+        if args.tp > 1:
+            par = dataclasses.replace(
+                par, tp=args.tp,
+                fsdp_axes=tuple(a for a in par.fsdp_axes if a != "model")
+                or ("data",))
+        else:
+            par = dataclasses.replace(par, tp=1)
+        cfg = dataclasses.replace(cfg, parallel=par)
     mesh = make_local_mesh(args.data, args.model)
     model = build_model(cfg)
     runtime = FSDPRuntime(model, mesh, planner=args.planner,
@@ -60,6 +78,14 @@ def main():
 
     params = runtime.init_params(args.seed)
     opt_state = optimizer.init(runtime)
+    start = 0
+    if args.resume and args.ckpt:
+        import pathlib
+
+        if (pathlib.Path(args.ckpt) / "meta.json").exists():
+            params, start, opt_state = ckpt.load(args.ckpt, runtime,
+                                                 opt_state)
+            print(f"resumed {args.ckpt} @ step {start}")
     step_fn = runtime.make_train_step(optimizer)
     stream = SyntheticStream(
         DataConfig(cfg.vocab, args.seq, args.batch, seed=args.seed), cfg)
@@ -72,9 +98,9 @@ def main():
           f"planner={args.planner} optimizer={cfg.optimizer} "
           f"mesh={dict(zip(mesh.axis_names, mesh.devices.shape))}")
 
-    step = jnp.int32(0)
+    step = jnp.int32(start)
     t0 = time.time()
-    for i in range(args.steps):
+    for i in range(start, args.steps):
         batch = stream.shard(stream.batch(i), runtime)
         params, opt_state, step, metrics = step_fn(
             params, opt_state, step, batch)

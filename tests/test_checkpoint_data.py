@@ -257,3 +257,146 @@ def test_cross_mesh_restore(tmp_path):
                          timeout=600)
     assert out.returncode == 0, out.stderr[-2000:]
     assert "RESTORE_OK" in out.stdout
+
+
+def test_fp8_wire_dtypes_widen_exact():
+    """S2: _savable widens every fp8 wire dtype (not just bf16) to fp32 and
+    _narrow restores it bitwise."""
+    from repro import compat
+    from repro.checkpoint.ckpt import _narrow, _savable
+
+    for name, dt in compat.float8_dtypes().items():
+        x = jnp.asarray(np.linspace(-3, 3, 64, dtype=np.float32)).astype(dt)
+        wide = _savable(x)
+        assert wide.dtype == np.float32
+        back = _narrow(wide, dt)
+        np.testing.assert_array_equal(
+            np.asarray(x).view(np.uint8), np.asarray(back).view(np.uint8),
+            err_msg=f"{name} not exact through widen/narrow")
+
+
+def _write_v1_checkpoint(path, rt, params, opt_state=None, step=1):
+    """Hand-write a pre-plan legacy (v1) checkpoint: monolithic state.npz
+    plus a meta.json with no "version", "store", or "ef_m" keys and no
+    plan.json -- the format the earliest sessions of this repo produced."""
+    import json
+
+    from repro.compat import tree_flatten_with_path
+    from repro.core.ragged import checkpoint_index
+
+    path.mkdir(parents=True, exist_ok=True)
+    arrays, groups = {}, {}
+    for name, lo in rt.layouts.items():
+        arrays[f"param__{name}"] = np.asarray(params[name])
+        groups[name] = {
+            "shard_size": lo.plan.shard_size,
+            "num_shards": lo.plan.num_shards,
+            "outer_size": lo.outer_size,
+            "mode": lo.plan.mode,
+            "index": checkpoint_index(lo.plan),
+        }
+    if opt_state is not None:
+        flat, _ = tree_flatten_with_path(opt_state)
+        for kp, v in flat:
+            key = "opt__" + "__".join(getattr(p, "key", str(p)) for p in kp)
+            arrays[key] = np.asarray(v)
+    np.savez(path / "state.npz", **arrays)
+    (path / "meta.json").write_text(
+        json.dumps({"step": step, "groups": groups}))
+
+
+def test_legacy_v1_restore(tmp_path):
+    """S3: a pre-plan v1 checkpoint (no version/store/ef_m in meta.json, no
+    plan.json) still loads -- params and same-plan optimizer state bitwise,
+    load_plan -> None."""
+    import pytest
+
+    cfg = get_config("gemma2-2b").reduced()
+    rt = FSDPRuntime(build_model(cfg), MESH)
+    opt = make_optimizer(cfg)
+    params = rt.init_params(2)
+    state = opt.init(rt)
+    params, state, _ = _train(rt, cfg, params, state, steps=2)
+    _write_v1_checkpoint(tmp_path / "v1", rt, params, state, step=2)
+
+    assert ckpt.load_plan(tmp_path / "v1") is None
+    p2, step, s2 = ckpt.load(tmp_path / "v1", rt, opt.init(rt))
+    assert step == 2
+    for name in params:
+        np.testing.assert_array_equal(np.asarray(params[name]),
+                                      np.asarray(p2[name]))
+    from repro.compat import tree_flatten_with_path
+    fa, _ = tree_flatten_with_path(state)
+    fb, _ = tree_flatten_with_path(s2)
+    for (ka, va), (kb, vb) in zip(fa, fb):
+        np.testing.assert_array_equal(np.asarray(va), np.asarray(vb))
+
+    # S1: v1 cross-plan + optimizer state must refuse loudly (the old code
+    # silently restored stale arrays shaped for the wrong plan)
+    rt_naive = FSDPRuntime(build_model(cfg), MESH, planner="naive")
+    with pytest.raises(ValueError, match="same-plan only"):
+        ckpt.load(tmp_path / "v1", rt_naive, make_optimizer(cfg).init(rt_naive))
+    # ...but params alone still cross-plan restore via _repack
+    p3, _ = ckpt.load(tmp_path / "v1", rt_naive)
+    for name, lo_a in rt.layouts.items():
+        lo_b = rt_naive.layouts[name]
+        a, b = np.asarray(params[name]), np.asarray(p3[name])
+        for li in (range(lo_a.n_layers) if lo_a.n_layers else [None]):
+            ta = lo_a.buffer.unpack_np(a[li] if li is not None else a)
+            tb = lo_b.buffer.unpack_np(b[li] if li is not None else b)
+            for k in ta:
+                np.testing.assert_array_equal(ta[k], tb[k])
+
+
+def test_legacy_v1_restore_8dev(tmp_path):
+    """S3 (8-device): the same hand-written v1 checkpoint restores onto an
+    8-way mesh (cross-plan m=1 -> m=8, params only)."""
+    import os
+    import subprocess
+    import sys
+    import textwrap
+
+    cfg = get_config("qwen2.5-14b").reduced()
+    rt = FSDPRuntime(build_model(cfg), MESH)
+    params = rt.init_params(5)
+    _write_v1_checkpoint(tmp_path / "v1", rt, params, step=4)
+    want = {}
+    for name, lo in rt.layouts.items():
+        a = np.asarray(params[name])
+        want.update({f"{name}__{t}": v for t, v in lo.buffer.unpack_np(
+            a[0] if lo.n_layers else a).items()})
+    np.savez(tmp_path / "want.npz", **want)
+
+    driver = textwrap.dedent(f"""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import dataclasses
+        import numpy as np
+        from repro.configs import get_config, build_model
+        from repro.configs.base import ParallelConfig
+        from repro.core.fsdp import FSDPRuntime
+        from repro.checkpoint import ckpt
+        from repro.launch.mesh import make_local_mesh
+        cfg = get_config("qwen2.5-14b").reduced()
+        cfg = dataclasses.replace(
+            cfg, parallel=ParallelConfig(("data",), ("data",)))
+        rt = FSDPRuntime(build_model(cfg), make_local_mesh(8, 1))
+        assert ckpt.load_plan({str(tmp_path / 'v1')!r}) is None
+        params, step = ckpt.load({str(tmp_path / 'v1')!r}, rt)
+        assert step == 4
+        want = np.load({str(tmp_path / 'want.npz')!r})
+        for name, lo in rt.layouts.items():
+            a = np.asarray(params[name])
+            got = lo.buffer.unpack_np(a[0] if lo.n_layers else a)
+            for t, v in got.items():
+                np.testing.assert_array_equal(v, want[f"{{name}}__{{t}}"])
+        print("LEGACY_8DEV_OK")
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", driver],
+                         capture_output=True, text=True, env=env,
+                         timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "LEGACY_8DEV_OK" in out.stdout

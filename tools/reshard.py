@@ -1,0 +1,388 @@
+#!/usr/bin/env python
+"""Offline checkpoint resharding: rewrite a v2 checkpoint for a new plan.
+
+    PYTHONPATH=src python tools/reshard.py SRC DST \
+        --arch gemma2-2b --reduced --data 4 --model 1 [--tp N] \
+        [--planner ragged] [--policies auto] [--drop-opt]
+
+The destination layout is a fresh ``ShardingPlan`` resolved host-side
+(``make_plan`` needs no devices), so an 8-way checkpoint reshard to 4-way —
+or to a different TP degree, plan mode, or store format — runs anywhere,
+e.g. on a single CPU node after a preemption resized the job.
+
+Both sides are per-shard ``.npy`` files addressed through the per-tensor
+shard index (``repro.core.reshard``), memmapped on both ends: peak host
+memory is ONE tensor (plus a shard row), never a layer stack or a full
+group buffer (``benchmarks/bench_reshard.py`` pins this).  Groups whose
+layout and store are unchanged are copied bytewise; changed groups stream
+masters tensor-by-tensor, then derive the destination store's leaves
+shard-row by shard-row (bf16 rounding / ``ops.quantize`` requantization —
+bitwise-identical to what a save-under-the-new-plan would write, because
+the planner aligns tensor starts and S to the quant block; EF residuals
+restart at zero).
+
+Optimizer state rides along: moment-buffer families follow their
+parameter's extents (8-bit codes/scales move on the aligned path and
+refuse an outer-layout change), Shampoo/Muon per-layer factors are stored
+unpadded (plan-independent) and follow their tensor's owning group across
+a TP regrouping, dense leaves copy verbatim.  ``--drop-opt`` omits
+optimizer state instead (the resumed job reinitializes it).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import pathlib
+import shutil
+import sys
+
+import numpy as np
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent / "src"))
+
+from repro.checkpoint.ckpt import (group_meta, opt_shard_file,  # noqa: E402
+                                   param_shard_file, shard_file_reader)
+from repro.core.ragged import checkpoint_index  # noqa: E402
+from repro.core.reshard import GroupIndex, copy_tensor  # noqa: E402
+from repro.core.store import EF_KEY  # noqa: E402
+
+
+def _entry_meta(entry) -> dict:
+    """The dst meta.json group entry for a plan entry (mirror of
+    ``ckpt.group_meta``, derived from the plan instead of a runtime)."""
+    return {
+        "index": checkpoint_index(entry.plan),
+        "shard_size": entry.plan.shard_size,
+        "num_shards": entry.plan.num_shards,
+        "outer_size": entry.outer_size,
+        "outer_dims": {k: int(v) for k, v in entry.outer_dims.items()},
+        "n_layers": entry.n_layers,
+        "mode": entry.plan.mode,
+        "store": entry.store.fmt,
+        "quant_block": entry.store.block,
+        "ef_m": entry.store.ef_m,
+    }
+
+
+def _same_group(saved: dict, want: dict) -> bool:
+    """Bytewise-copy eligibility: every layout AND store field matches."""
+    keys = ("index", "shard_size", "num_shards", "outer_size", "outer_dims",
+            "n_layers", "mode", "store", "ef_m")
+    if any(saved.get(k) != want[k] for k in keys):
+        return False
+    if want["store"] == "q8_block" or want["ef_m"]:
+        return saved.get("quant_block") == want["quant_block"]
+    return True
+
+
+def _open_rows(path, n_layers: int, row_len: int, dtype):
+    """A zero-initialized dst ``.npy`` memmap shaped like one shard file."""
+    shape = (n_layers, row_len) if n_layers else (row_len,)
+    return np.lib.format.open_memmap(path, mode="w+", dtype=dtype,
+                                     shape=shape)
+
+
+def _rows_writer(mmaps):
+    def write(j: int, layer):
+        return mmaps[j] if layer is None else mmaps[j][layer]
+
+    return write
+
+
+def _reshard_group_params(gname, entry, sgroups, src_shards, dst_shards,
+                          tensor_src, src_idx):
+    """Stream one changed group's master, then derive its store leaves."""
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+
+    dst = GroupIndex.from_entry(entry)
+    store = entry.store
+    S, L = entry.plan.shard_size, entry.n_layers or 0
+    masters = {j: _open_rows(dst_shards / param_shard_file(gname, "master", j),
+                             L, S, np.float32)
+               for j in range(dst.num_rows)}
+    write = _rows_writer(masters)
+    for name in entry.plan.names:
+        g_old = tensor_src.get(name)
+        if g_old is None:
+            raise ValueError(
+                f"tensor {name!r} (group {gname!r}) not in source "
+                f"checkpoint")
+        s_idx = src_idx[g_old]
+        if (s_idx.n_layers or 0) != L:
+            raise ValueError(
+                f"{name}: layer count changed ({s_idx.n_layers} -> {L})")
+        read = shard_file_reader(
+            src_shards, lambda j, g=g_old: param_shard_file(g, "master", j))
+        for li in (range(L) if L else [None]):
+            copy_tensor(s_idx, dst, name, read, write, layer=li)
+    # derive the rest of the store's leaves shard-row by shard-row (S is a
+    # block multiple, so per-row quantization == whole-buffer quantization)
+    extra = {}
+    if store.fmt == "bf16":
+        for j, mm in masters.items():
+            rows = mm if L else mm[None, :]
+            for li in range(rows.shape[0]):
+                rows[li] = np.asarray(
+                    jnp.asarray(rows[li]).astype(jnp.bfloat16)
+                    .astype(jnp.float32))
+    elif store.quantized:
+        for j in range(dst.num_rows):
+            extra[("codes", j)] = _open_rows(
+                dst_shards / param_shard_file(gname, "codes", j),
+                L, S, np.int8)
+            extra[("scales", j)] = _open_rows(
+                dst_shards / param_shard_file(gname, "scales", j),
+                L, S // store.block, np.float32)
+        for j, mm in masters.items():
+            rows = mm if L else mm[None, :]
+            for li in range(rows.shape[0]):
+                codes, scales = ops.quantize(jnp.asarray(rows[li]),
+                                             store.block)
+                dst_c = extra[("codes", j)]
+                dst_s = extra[("scales", j)]
+                (dst_c[li] if L else dst_c)[...] = np.asarray(codes)
+                (dst_s[li] if L else dst_s)[...] = np.asarray(scales)
+    if store.has_ef:
+        for j in range(dst.num_rows):
+            # freshly created memmaps are zero-filled == a reset EF history
+            _open_rows(dst_shards / param_shard_file(gname, EF_KEY, j),
+                       L, S * store.ef_m, np.float32)
+    for mm in list(masters.values()) + list(extra.values()):
+        mm.flush()
+
+
+def _tensor_group_map(plan) -> dict:
+    return {t: g for g, e in plan.groups.items() for t in e.plan.names}
+
+
+def reshard(src, dst, new_plan, *, drop_opt: bool = False,
+            verbose: bool = True) -> dict:
+    """Rewrite checkpoint ``src`` into ``dst`` under ``new_plan``.
+
+    Returns a summary dict: which groups were copied bitwise vs streamed,
+    and how optimizer leaves moved.
+    """
+    src, dst = pathlib.Path(src), pathlib.Path(dst)
+    meta_src = json.loads((src / "meta.json").read_text())
+    if int(meta_src.get("version", 1)) < 2:
+        raise ValueError(
+            f"{src}: legacy (v1) checkpoint; load + re-save it under the "
+            f"current format first (ckpt.load/save), then reshard")
+    src_shards, dst_shards = src / "shards", dst / "shards"
+    dst_shards.mkdir(parents=True, exist_ok=True)
+
+    sgroups = meta_src["groups"]
+    src_idx = {g: GroupIndex.from_meta(sg) for g, sg in sgroups.items()}
+    tensor_src = {t: g for g, sg in sgroups.items() for t in sg["index"]}
+
+    summary = {"copied": [], "streamed": [], "opt": "dropped" if drop_opt
+               else "resharded"}
+    dst_groups = {}
+    for gname, entry in new_plan.groups.items():
+        want = _entry_meta(entry)
+        dst_groups[gname] = want
+        saved = sgroups.get(gname)
+        if saved is not None and _same_group(saved, want):
+            store = entry.store
+            rows = entry.outer_size * entry.plan.num_shards
+            for leaf in (store.state_keys() or ("master",)):
+                for j in range(rows):
+                    f = param_shard_file(gname, leaf, j)
+                    shutil.copyfile(src_shards / f, dst_shards / f)
+            summary["copied"].append(gname)
+        else:
+            _reshard_group_params(gname, entry, sgroups, src_shards,
+                                  dst_shards, tensor_src, src_idx)
+            summary["streamed"].append(gname)
+        if verbose:
+            how = "copy" if gname in summary["copied"] else "stream"
+            print(f"[reshard] params {gname}: {how}")
+
+    manifest = []
+    if not drop_opt:
+        manifest = _reshard_opt(meta_src, new_plan, src_shards, dst_shards,
+                                tensor_src, src_idx, verbose)
+
+    meta = {"version": 2, "step": int(meta_src["step"]),
+            "groups": dst_groups, "opt": manifest}
+    (dst / "meta.json").write_text(json.dumps(meta, indent=1))
+    (dst / "plan.json").write_text(
+        json.dumps(new_plan.to_json(), sort_keys=True, indent=1))
+    return summary
+
+
+def _reshard_opt(meta_src, new_plan, src_shards, dst_shards, tensor_src,
+                 src_idx, verbose):
+    """Move the optimizer manifest: buffer families re-follow their
+    parameters under the new plan; factors/dense copy (factors follow a
+    migrated tensor's new owning group)."""
+    families: dict[tuple, dict] = {}
+    others = []
+    for ent in meta_src.get("opt", []):
+        if ent["kind"] == "buffer":
+            families.setdefault(tuple(ent["path"][:-1]), {})[
+                ent["group"]] = ent
+        else:
+            others.append(ent)
+
+    new_tensor_group = _tensor_group_map(new_plan)
+    sgroups = meta_src["groups"]
+    manifest = []
+    fid = 0
+    for prefix, group_ents in sorted(families.items()):
+        for gname, entry in new_plan.groups.items():
+            dst = GroupIndex.from_entry(entry)
+            file = f"o__{fid:03d}"
+            fid += 1
+            src_ent = group_ents.get(gname)
+            want = _entry_meta(entry)
+            div = src_ent["div"] if src_ent is not None else next(
+                e["div"] for e in group_ents.values())
+            same = (src_ent is not None
+                    and _same_layout_fields(sgroups[gname], want))
+            if same:
+                for j in range(dst.num_rows):
+                    shutil.copyfile(
+                        src_shards / opt_shard_file(src_ent["file"], j),
+                        dst_shards / opt_shard_file(file, j))
+                dtype = src_ent["dtype"]
+            else:
+                dtype = _remap_opt_family(prefix, gname, entry, dst, div,
+                                          group_ents, src_shards, dst_shards,
+                                          file, tensor_src, src_idx)
+            manifest.append({"path": list(prefix) + [gname],
+                             "kind": "buffer", "group": gname, "div": div,
+                             "dtype": dtype, "file": file})
+            if verbose:
+                print(f"[reshard] opt {'/'.join(prefix)}/{gname}: "
+                      f"{'copy' if same else 'stream'}")
+    for ent in others:
+        file = f"o__{fid:03d}"
+        fid += 1
+        new_ent = dict(ent, file=file)
+        if ent["kind"] == "factor":
+            key = ent["path"][-1]
+            g_old, rest = key.split("/", 1)
+            tname = rest.rsplit("/", 1)[0]
+            g_new = new_tensor_group.get(tname)
+            if g_new is None:
+                raise ValueError(
+                    f"optimizer factor {key!r}: tensor {tname!r} not in "
+                    f"the new plan")
+            if g_new != g_old:
+                # the tensor migrated groups (TP regrouping): the factor
+                # follows it — rewrite the key; local dims are validated
+                # shape-wise at load
+                new_ent["path"] = ent["path"][:-1] + [f"{g_new}/{rest}"]
+                new_ent["group"] = g_new
+        shutil.copyfile(src_shards / f"{ent['file']}.npy",
+                        dst_shards / f"{file}.npy")
+        manifest.append(new_ent)
+    return manifest
+
+
+def _same_layout_fields(saved: dict, want: dict) -> bool:
+    keys = ("index", "shard_size", "num_shards", "outer_size", "outer_dims",
+            "n_layers", "mode")
+    return all(saved.get(k) == want[k] for k in keys)
+
+
+def _remap_opt_family(prefix, gname, entry, dst, div, group_ents, src_shards,
+                      dst_shards, file, tensor_src, src_idx):
+    L = entry.n_layers or 0
+    sl = entry.plan.shard_size // div
+    mmaps = None
+    dtype = None
+    for name in entry.plan.names:
+        g_old = tensor_src.get(name)
+        src_ent = group_ents.get(g_old) if g_old is not None else None
+        if src_ent is None:
+            raise ValueError(
+                f"optimizer state {'/'.join(prefix)}: no source buffer for "
+                f"tensor {name!r} (old group {g_old!r})")
+        if src_ent["div"] != div:
+            raise ValueError(
+                f"optimizer state {'/'.join(prefix)}: block granularity "
+                f"changed ({src_ent['div']} -> {div}); 8-bit optimizer "
+                f"state cannot cross it — use --drop-opt")
+        read = shard_file_reader(
+            src_shards, lambda j, f=src_ent["file"]: opt_shard_file(f, j))
+        if mmaps is None:
+            probe = np.asarray(read(0, 0 if L else None))
+            dtype = probe.dtype
+            mmaps = {j: _open_rows(
+                dst_shards / opt_shard_file(file, j), L, sl, dtype)
+                for j in range(dst.num_rows)}
+        write = _rows_writer(mmaps)
+        s_idx = src_idx[g_old]
+        if (s_idx.n_layers or 0) != L:
+            raise ValueError(
+                f"optimizer state {'/'.join(prefix)}: layer count changed "
+                f"for {name!r} ({s_idx.n_layers} -> {L})")
+        aligned = div > 1 or np.dtype(dtype).kind in "iu"
+        for li in (range(L) if L else [None]):
+            copy_tensor(s_idx, dst, name, read, write,
+                        layer=li, div=div, aligned=aligned)
+    for mm in (mmaps or {}).values():
+        mm.flush()
+    return str(dtype) if dtype is not None else "float32"
+
+
+def build_new_plan(args):
+    """Resolve the destination ShardingPlan from CLI args — pure host-side
+    metadata (no jax devices touched)."""
+    from repro.configs import build_model, get_config
+    from repro.core.policy import make_plan
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    if args.optimizer:
+        cfg = dataclasses.replace(cfg, optimizer=args.optimizer)
+    if args.tp:
+        par = cfg.parallel
+        if args.tp > 1:
+            par = dataclasses.replace(
+                par, tp=args.tp,
+                fsdp_axes=tuple(a for a in par.fsdp_axes if a != "model")
+                or ("data",))
+        else:
+            par = dataclasses.replace(par, tp=1)
+        cfg = dataclasses.replace(cfg, parallel=par)
+    model = build_model(cfg)
+    return make_plan(model, {"data": args.data, "model": args.model},
+                     args.policies, planner=args.planner)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        description="reshard a v2 checkpoint to a new mesh/TP/plan")
+    ap.add_argument("src")
+    ap.add_argument("dst")
+    ap.add_argument("--arch", default="gemma2-2b")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--data", type=int, default=1, help="new data axis size")
+    ap.add_argument("--model", type=int, default=1,
+                    help="new model axis size")
+    ap.add_argument("--tp", type=int, default=0,
+                    help="override the arch config's TP degree")
+    ap.add_argument("--planner", default="ragged")
+    ap.add_argument("--policies", default=None)
+    ap.add_argument("--optimizer", default=None)
+    ap.add_argument("--drop-opt", action="store_true",
+                    help="omit optimizer state from the output")
+    args = ap.parse_args(argv)
+
+    new_plan = build_new_plan(args)
+    summary = reshard(args.src, args.dst, new_plan, drop_opt=args.drop_opt)
+    print(f"[reshard] done: {len(summary['copied'])} group(s) copied "
+          f"bitwise, {len(summary['streamed'])} streamed; "
+          f"opt {summary['opt']}")
+
+
+if __name__ == "__main__":
+    main()
