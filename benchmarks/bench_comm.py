@@ -1,0 +1,167 @@
+"""Comm calibration harness: measure every wire codec x route x ring chunk
+on the ACTUAL mesh and persist a ``comm-profile/v1`` (core.profile) as
+``BENCH_comm.json`` at the repo root.
+
+This is the measurement half of the autotuner.  ``CostModel.from_profile``
+(core.policy) fits latency/bandwidth lines over these entries and the auto
+planner prices formats -- and picks each ring group's ``ring_chunk_elems``
+-- from the measured curves instead of the TPU-v5e paper constants.
+
+Entries are END-TO-END: a q8_block gather includes the fused dequant
+decode, a q8_block reduce includes encode + decode.  On CPU the quant
+kernels run in Pallas interpret mode, so q8 wires measure *expensive* here
+while the collectives are ~memcpy -- exactly the kind of backend truth a
+roofline built from paper constants gets wrong, and the reason the
+measured profile can legitimately disagree with ``builtin-roofline``.
+
+    PYTHONPATH=src python -m benchmarks.bench_comm [--quick] [--out PATH]
+
+Run under ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the CI
+``autotuner`` job) to calibrate real 8-way rings on a CPU host.
+"""
+import argparse
+import json
+import os
+
+import numpy as np
+
+BENCH_JSON = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_comm.json")
+
+BLOCK = 1024
+FMTS = ("fp32", "bf16", "q8_block")
+# profile mode name -> (gather_mode, reduce_mode) args of the wire layer
+REDUCE_ROUTES = {"xla": ("xla", "match"), "ring": ("ring", "match"),
+                 "ring_acc": ("ring", "ring_acc")}
+
+
+def _chunk_sweep(shard: int) -> list:
+    """Ring-chunk candidates below the shard-sized default, q8-block
+    aligned so one sweep serves every format."""
+    return [shard // k for k in (2, 4, 8)
+            if shard // k >= BLOCK and shard % (k * BLOCK) == 0]
+
+
+def run(quick: bool = False, out: str = BENCH_JSON):
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    from repro.compat import shard_map
+    from repro.core.profile import CommProfile, CommSample
+    from repro.core.wire import (WireCodec, codec_gather,
+                                 codec_reduce_scatter, payload_all_gather)
+    from repro.launch.mesh import make_local_mesh
+
+    from .common import emit, timeit
+
+    n = jax.device_count()
+    mesh = make_local_mesh(n, 1)
+    axes = ("data",) if n > 1 else ()
+    axis_sizes = (n,) if n > 1 else ()
+    f32 = jnp.dtype(jnp.float32)
+
+    sizes = (1 << 16, 1 << 18) if quick else (1 << 18, 1 << 21)
+    iters = 3 if quick else 10
+    warmup = 1 if quick else 3
+    rng = np.random.default_rng(0)
+    entries = []
+
+    def sample(direction, fmt, mode, elems, chunk, us):
+        # chunk_elems == elems is the schema's shard-sized-default marker;
+        # sweep entries carry the actual ring_chunk_elems knob value
+        entries.append(CommSample(direction=direction, fmt=fmt, mode=mode,
+                                  elems=elems,
+                                  chunk_elems=elems if chunk is None
+                                  else chunk, time_us=us))
+        emit(f"comm/{direction}/{fmt}/{mode}", us,
+             f"elems={elems};chunk={'shard' if chunk is None else chunk}")
+
+    def gather_fn(fmt, mode, chunk):
+        codec = WireCodec(fmt, BLOCK)
+        if not codec.quantized:
+            def f(x):
+                return codec_gather(x, axes, axis_sizes, codec,
+                                    WireCodec("fp32"), f32, f32, mode,
+                                    "match", chunk)
+            return jax.jit(shard_map(f, mesh=mesh, in_specs=P("data"),
+                                     out_specs=P(None), check=False))
+
+        # quantized store: params live pre-encoded, so the end-to-end
+        # gather is payload movement + the fused dequant (store.py's
+        # gather_payload + decode)
+        def fq(c, s):
+            cc = payload_all_gather(c, axes, axis_sizes, mode, chunk)
+            ss = payload_all_gather(
+                s, axes, axis_sizes, mode,
+                max(chunk // BLOCK, 1) if chunk else None)
+            return codec.decode({"codes": cc, "scales": ss}, f32)
+        return jax.jit(shard_map(fq, mesh=mesh,
+                                 in_specs=(P("data"), P("data")),
+                                 out_specs=P(None), check=False))
+
+    def reduce_fn(fmt, mode, chunk):
+        codec = WireCodec(fmt, BLOCK)
+        gmode, rmode = REDUCE_ROUTES[mode]
+
+        def f(ct):
+            shard, _ = codec_reduce_scatter(ct, None, codec, axes,
+                                            axis_sizes, gmode, rmode, f32,
+                                            chunk)
+            return shard
+        return jax.jit(shard_map(f, mesh=mesh, in_specs=P(None),
+                                 out_specs=P("data"), check=False))
+
+    for elems in sizes:
+        shard = elems // max(n, 1)
+        x = jnp.asarray(rng.normal(size=elems).astype(np.float32))
+        q8 = WireCodec("q8_block", BLOCK).encode(x)
+        sweep = _chunk_sweep(shard) if (n > 1 and elems == max(sizes)) \
+            else []
+
+        for fmt in FMTS:
+            args = (q8["codes"], q8["scales"]) if fmt == "q8_block" \
+                else (x,)
+            for mode in ("xla", "ring"):
+                us = timeit(gather_fn(fmt, mode, None), *args,
+                            iters=iters, warmup=warmup)
+                sample("gather", fmt, mode, elems, None, us)
+                if mode == "ring":
+                    for c in sweep:
+                        us = timeit(gather_fn(fmt, mode, c), *args,
+                                    iters=iters, warmup=warmup)
+                        sample("gather", fmt, mode, elems, c, us)
+            for mode in REDUCE_ROUTES:
+                us = timeit(reduce_fn(fmt, mode, None), x,
+                            iters=iters, warmup=warmup)
+                sample("reduce", fmt, mode, elems, None, us)
+                if mode in ("ring", "ring_acc"):
+                    for c in sweep:
+                        us = timeit(reduce_fn(fmt, mode, c), x,
+                                    iters=iters, warmup=warmup)
+                        sample("reduce", fmt, mode, elems, c, us)
+
+    prof = CommProfile(
+        name=f"measured-{jax.default_backend()}-{n}dev"
+             + ("-quick" if quick else ""),
+        entries=tuple(entries), backend=jax.default_backend(), world=n,
+        builtin=False, end_to_end=True, quick=quick)
+    prof.save(out)
+    emit("comm/bench_json", 0.0,
+         f"wrote {out};name={prof.name};hash={prof.content_hash()}")
+    return prof
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller sizes / fewer iters (CI calibration)")
+    ap.add_argument("--out", default=BENCH_JSON,
+                    help=f"output profile path (default {BENCH_JSON})")
+    args = ap.parse_args(argv)
+    print("name,us_per_call,derived")
+    run(quick=args.quick, out=args.out)
+
+
+if __name__ == "__main__":
+    main()

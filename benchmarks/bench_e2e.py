@@ -11,6 +11,8 @@ collective terms come from the dry-run roofline instead).  Memory = XLA
 temp allocation from compiled memory_analysis.
 """
 import dataclasses
+import json
+import os
 
 import jax
 import jax.numpy as jnp
@@ -25,6 +27,12 @@ from repro.optim import make_optimizer
 from .common import emit, timeit
 
 MODES = ["ragged", "fsdp2", "megatron", "naive"]
+
+# persisted --schedule artifact (repo root, next to BENCH_kernels.json):
+# per-CommSchedule step time + memory/wire accounting, the end-to-end
+# counterpart of the BENCH_comm.json micro-profile
+BENCH_JSON = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_e2e.json")
 
 
 def _bench_cfg(arch: str, quick: bool):
@@ -97,6 +105,7 @@ def run_schedules(quick: bool = False, arch: str = "gpt-oss-120b"):
     # whatever order VARIANTS declares
     order = ["default"] + [k for k in VARIANTS if k != "default"]
     order += list(APPROX_VARIANTS)
+    persisted = {}
     for name in order:
         sched = VARIANTS.get(name) or APPROX_VARIANTS[name]
         rt = FSDPRuntime(build_model(cfg), mesh, schedule=sched,
@@ -109,6 +118,13 @@ def run_schedules(quick: bool = False, arch: str = "gpt-oss-120b"):
         if base is None:
             base = us
         out[name] = (us, temp)
+        persisted[name] = {
+            "step_us": us, "temp_mb": temp / 1e6,
+            "gathered_peak_mb": rt.gathered_peak_bytes() / 1e6,
+            "gather_wire_mb": rt.gather_wire_bytes() / 1e6,
+            "reduce_wire_mb": rt.reduce_wire_bytes() / 1e6,
+            "speedup_vs_default": base / us,
+            "schedule": sched.describe()}
         emit(f"sched/{arch}/{name}/step", us,
              f"temp_mb={temp/1e6:.1f};"
              f"gathered_peak_mb={rt.gathered_peak_bytes()/1e6:.2f};"
@@ -116,6 +132,12 @@ def run_schedules(quick: bool = False, arch: str = "gpt-oss-120b"):
              f"reduce_wire_mb={rt.reduce_wire_bytes()/1e6:.2f};"
              f"speedup_vs_default={base/us:.3f};"
              f"{sched.describe().replace(' ', ';')}")
+    with open(BENCH_JSON, "w") as f:
+        json.dump({"backend": jax.default_backend(), "quick": quick,
+                   "arch": arch, "schedules": persisted},
+                  f, indent=2, sort_keys=True)
+        f.write("\n")
+    emit(f"sched/{arch}/bench_json", 0.0, f"wrote {BENCH_JSON}")
     return out
 
 

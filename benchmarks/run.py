@@ -17,8 +17,8 @@ def main() -> None:
     args = ap.parse_args()
     quick = not args.full
 
-    from . import (bench_ablation, bench_copy_overhead, bench_e2e,
-                   bench_kernels, bench_planner, bench_scaling)
+    from . import (bench_ablation, bench_comm, bench_copy_overhead,
+                   bench_e2e, bench_kernels, bench_planner, bench_scaling)
 
     suites = [
         ("table1_copy_overhead", bench_copy_overhead.run),
@@ -28,6 +28,7 @@ def main() -> None:
         ("fig9_scaling", bench_scaling.run),
         ("table2_ablation", bench_ablation.run),
         ("kernels", bench_kernels.run),
+        ("comm_autotune", bench_comm.run),
     ]
     print("name,us_per_call,derived")
     failed = []

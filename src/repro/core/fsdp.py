@@ -97,7 +97,8 @@ class FSDPRuntime:
                  compute_dtype=jnp.bfloat16, donate: bool = True,
                  scan_unroll: int = 1, schedule: CommSchedule | None = None,
                  group_schedules: Mapping[str, Any] | None = None,
-                 policies=None, plan: ShardingPlan | None = None):
+                 policies=None, plan: ShardingPlan | None = None,
+                 cost_model=None):
         self.model = model
         self.cfg = model.cfg
         self.mesh = mesh
@@ -137,7 +138,7 @@ class FSDPRuntime:
                     "pass either policies= or schedule=/group_schedules=, "
                     "not both")
             plan = make_plan(model, mesh, policies, planner=planner,
-                             compute_dtype=cdt)
+                             compute_dtype=cdt, cost_model=cost_model)
         self.plan = plan
         self.planner_mode = plan.planner
         self.schedule = plan.base_schedule()
@@ -585,7 +586,8 @@ class FSDPRuntime:
                                 return codec_reduce_scatter(
                                     ct1, ef1, rcodec, lo.fsdp_axes,
                                     lo.fsdp_axis_sizes, sched.gather_mode,
-                                    sched.reduce_mode, pdt)
+                                    sched.reduce_mode, pdt,
+                                    sched.ring_chunk_elems)
 
                             sum_ct = grads[n][EF_KEY]
                             ef0 = trainable[n][EF_KEY]

@@ -69,6 +69,7 @@ from typing import Any, Callable, Mapping, Optional, Sequence
 import numpy as np
 
 from .planner import get_planner, plan_group
+from .profile import CommProfile, builtin_profile, load_profile
 from .ragged import LANE, GroupPlan, Placement, TensorSpec, compose_granularity
 from .schedule import CommSchedule, resolve_group_schedules
 from .store import ParamStore
@@ -106,6 +107,9 @@ class ShardingPolicy:
     keep_last_gathered: bool = False     # last layer stays gathered
     sharded: bool = True                 # False: replicate, psum grads
     serve_quant_matmul: bool = False     # serve-only int8-GEMM on q8 weights
+    ring_chunk_elems: Optional[int] = None  # max elems per ring message
+    #   (None = shard-sized; the autotuner sets this from a measured
+    #   profile's chunk curve; bitwise-neutral within every mode pair)
 
     def __post_init__(self):
         self.to_schedule()  # knob validation lives in CommSchedule
@@ -123,6 +127,7 @@ class ShardingPolicy:
             reduce_wire=self.reduce_wire,
             sharded=self.sharded,
             serve_quant_matmul=self.serve_quant_matmul,
+            ring_chunk_elems=self.ring_chunk_elems,
         )
 
     @classmethod
@@ -139,13 +144,16 @@ class ShardingPolicy:
             keep_last_gathered=sched.keep_last_gathered,
             sharded=sched.sharded,
             serve_quant_matmul=sched.serve_quant_matmul,
+            ring_chunk_elems=sched.ring_chunk_elems,
         )
 
     def describe(self) -> str:
         return (f"{self.store} {self.gather_mode}/{self.reduce_mode} "
                 f"g={self.gather_dtype or 'compute'} "
                 f"r={self.reduce_wire or self.reduce_dtype or 'wire'}"
-                f"{'' if self.sharded else ' replicated'}")
+                + (f" chunk={self.ring_chunk_elems}"
+                   if self.ring_chunk_elems is not None else "")
+                + ("" if self.sharded else " replicated"))
 
 
 # --------------------------------------------------------------------------- #
@@ -388,6 +396,18 @@ class ShardingPlan:
     axis_sizes: Mapping[str, int]
     planner: str
     compute_dtype: str  # dtype name, e.g. "bfloat16"
+    # pricing provenance (ISSUE 8): which comm profile the auto cost model
+    # priced this plan with.  "none" = the plan was not cost-model-priced
+    # (explicit policies / legacy lowering).  The hash is the profile's
+    # content hash, so re-planning from the same BENCH_comm.json provably
+    # reproduces the same decisions and ``diff`` flags profile drift.
+    profile_name: str = "none"
+    profile_hash: str = ""
+    # per-group predicted comm ms under the pricing profile vs the builtin
+    # roofline -- describe() renders these side by side so a measured
+    # profile's divergent decision is visible, not just different
+    pricing: Mapping[str, Mapping[str, float]] = dataclasses.field(
+        default_factory=dict)
 
     def base_schedule(self) -> CommSchedule:
         return self.base.to_schedule()
@@ -427,8 +447,16 @@ class ShardingPlan:
                 f"scan[prefetch={int(self.base.prefetch)} "
                 f"reshard={int(self.base.reshard_after_forward)} "
                 f"keep_last={int(self.base.keep_last_gathered)}]")
+        if self.profile_name != "none":
+            head += f" profile={self.profile_name}@{self.profile_hash}"
         cols = ["group", "tag", "L", "m", "S", "pad%", "policy",
                 "gather_wire_mb", "reduce_wire_mb"]
+        priced = bool(self.pricing)
+        if priced:
+            # measured-vs-builtin pricing side by side: what the pricing
+            # profile predicts for the chosen policy, next to what the
+            # builtin roofline predicts for it
+            cols += ["auto_ms", "builtin_ms"]
         rows = []
         for name, e in self.groups.items():
             rows.append([
@@ -439,6 +467,10 @@ class ShardingPlan:
                 f"{e.gather_wire_bytes(self.compute_dtype) / 1e6:.3f}",
                 f"{e.reduce_wire_bytes(self.compute_dtype) / 1e6:.3f}",
             ])
+            if priced:
+                p = self.pricing.get(name, {})
+                rows[-1] += [f"{p.get('auto_ms', 0.0):.4f}",
+                             f"{p.get('builtin_ms', 0.0):.4f}"]
         widths = [max(len(c), *(len(r[i]) for r in rows)) if rows else len(c)
                   for i, c in enumerate(cols)]
         lines = [head,
@@ -450,10 +482,16 @@ class ShardingPlan:
     # ---- serialization --------------------------------------------------- #
     def to_json(self) -> dict:
         return {
-            "version": 2,  # v2 adds per-group "outer_dims"
+            # v2 added per-group "outer_dims"; v3 adds the pricing
+            # provenance ("profile") and the per-group "pricing" table
+            "version": 3,
             "axis_sizes": {a: int(s) for a, s in self.axis_sizes.items()},
             "planner": self.planner,
             "compute_dtype": self.compute_dtype,
+            "profile": {"name": self.profile_name,
+                        "hash": self.profile_hash},
+            "pricing": {name: {k: float(v) for k, v in p.items()}
+                        for name, p in self.pricing.items()},
             "base": dataclasses.asdict(self.base),
             "groups": {
                 name: {
@@ -519,10 +557,15 @@ class ShardingPlan:
                 # v1 plan files predate outer_dims; absent == no outer split
                 outer_dims={k: int(v)
                             for k, v in g.get("outer_dims", {}).items()})
+        prof = data.get("profile", {})  # v1/v2 plan files: unpriced
         return cls(base=ShardingPolicy(**data["base"]), groups=groups,
                    axis_sizes=dict(data["axis_sizes"]),
                    planner=data["planner"],
-                   compute_dtype=data["compute_dtype"])
+                   compute_dtype=data["compute_dtype"],
+                   profile_name=prof.get("name", "none"),
+                   profile_hash=prof.get("hash", ""),
+                   pricing={name: {k: float(v) for k, v in p.items()}
+                            for name, p in data.get("pricing", {}).items()})
 
     def diff(self, other: "ShardingPlan") -> list[str]:
         """Human-readable field-level differences vs ``other`` (empty ==
@@ -589,15 +632,26 @@ def layout_changed_groups(old: ShardingPlan, new: ShardingPlan) -> set[str]:
 
 @dataclasses.dataclass(frozen=True)
 class CostModel:
-    """Roofline terms the auto-planner scores candidate policies with.
+    """The terms the auto-planner scores candidate policies with.
 
-    Per group and candidate store format, the predicted per-step comm time
-    is ``gathers_per_step * wire_bytes * (m-1)/m / ici_bw`` plus, for a
-    quantized store, the local dequant HBM traffic (read 1 B/elem codes +
-    scales, write the compute-dtype buffer) and a fixed per-collective
-    issue latency.  The format with the smallest predicted time wins, ties
-    broken toward the earlier (more exact) format -- so an m=1 mesh keeps
-    fp32 everywhere and a bandwidth-bound layer stack at scale takes the
+    Two pricing sources, one interface:
+
+    * **builtin roofline** (``profile`` is None or a ``builtin=True``
+      profile): the closed-form model over the ``launch/mesh.py``
+      constants -- ``gathers_per_step * wire_bytes * (m-1)/m / ici_bw``
+      plus, for quantized payloads, the analytic encode/decode HBM traffic
+      and a per-collective issue latency.  Latency is now *per mode*
+      (satellite of ISSUE 8): the xla collective pays ``xla_latency_s``
+      once, the manual rings pay ``ring_hop_latency_s`` per hop (m-1 hops).
+    * **measured profile** (``from_profile``): per (direction, fmt, mode)
+      latency/bandwidth curves fitted from ``BENCH_comm.json``
+      measurements on the actual mesh (core.profile).  Measured curves are
+      end-to-end -- codec encode/decode cost is inside the measurement --
+      so the analytic HBM add-ons are skipped.
+
+    The format with the smallest predicted time wins, ties broken toward
+    the earlier (more exact) candidate -- so an m=1 mesh keeps fp32
+    everywhere and a bandwidth-bound layer stack at scale takes the
     ~4x-cheaper q8_block wire.  Tiny *unstacked* groups (< ``replicate_
     bytes`` of master weights) are kept replicated: their per-step gather
     latency outweighs the memory the shard would save.
@@ -606,11 +660,15 @@ class CostModel:
     ici_bw: float
     hbm_bw: float
     peak_flops: float
-    gather_latency_s: float = 5e-6
+    xla_latency_s: float = 5e-6       # per xla collective issue
+    ring_hop_latency_s: float = 5e-6  # per ppermute hop (rings pay m-1)
     replicate_bytes: int = 4 << 20
+    profile: Optional[CommProfile] = None
 
     # store formats in preference order (ties break toward the left)
     CANDIDATES = ("fp32", "bf16", "q8_block")
+    # gather modes in preference order (xla wins ties)
+    GATHER_MODES = ("xla", "ring")
 
     @classmethod
     def default(cls) -> "CostModel":
@@ -618,20 +676,89 @@ class CostModel:
 
         return cls(ici_bw=ICI_BW, hbm_bw=HBM_BW, peak_flops=PEAK_FLOPS_BF16)
 
+    @classmethod
+    def from_profile(cls, profile, hbm_bw: float | None = None,
+                     peak_flops: float | None = None) -> "CostModel":
+        """A CostModel pricing from a measured ``CommProfile`` (the object,
+        or any path to a ``BENCH_comm.json``-schema file).  ``ici_bw`` is
+        back-derived from the fitted fp32 gather curve for reporting and
+        for curves the profile does not cover; HBM/FLOPS stay the mesh
+        constants (the profile measures the wire, not the memory system)."""
+        from ..launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+        if not isinstance(profile, CommProfile):
+            profile = load_profile(profile)
+        ici = ICI_BW
+        for mode in ("xla", "ring"):
+            if profile.has("gather", "fp32", mode):
+                _, slope = profile.linear("gather", "fp32", mode)
+                if slope > 0:
+                    ici = 4.0 / slope  # fp32: 4 wire bytes per element
+                    break
+        return cls(ici_bw=ici, hbm_bw=hbm_bw or HBM_BW,
+                   peak_flops=peak_flops or PEAK_FLOPS_BF16,
+                   profile=profile)
+
+    # ---- provenance ------------------------------------------------------ #
+    @property
+    def measured(self) -> bool:
+        return self.profile is not None and not self.profile.builtin
+
+    def provenance_profile(self) -> CommProfile:
+        """The profile this model prices with: the attached measured one,
+        or the builtin roofline rendered from its own constants -- so every
+        auto plan can record a (name, content hash) provenance pair."""
+        if self.profile is not None:
+            return self.profile
+        return builtin_profile(self.ici_bw, self.xla_latency_s)
+
+    # ---- shared pricing helpers ------------------------------------------ #
+    def _latency(self, mode: str, m: int) -> float:
+        """Per-collective issue latency under the builtin roofline: no
+        collective at m=1; one xla issue, or m-1 ring hops."""
+        if m <= 1:
+            return 0.0
+        if mode == "xla":
+            return self.xla_latency_s
+        return self.ring_hop_latency_s * (m - 1)
+
+    def _measured_time(self, direction: str, fmt: str, mode: str,
+                       elems: float, m: int) -> Optional[float]:
+        """One collective's seconds from the measured curve, or None when
+        this model has no measured entry for the key.  The fitted slope
+        includes the profile world's (w-1)/w ring volume factor, so it is
+        rescaled to the group's m (0 at m=1: no wire)."""
+        if not (self.measured and self.profile.has(direction, fmt, mode)):
+            return None
+        lat, slope = self.profile.linear(direction, fmt, mode)
+        w = self.profile.world
+        rw = (w - 1) / w if w > 1 else 1.0
+        rm = (m - 1) / m if m > 1 else 0.0
+        return lat + elems * slope * (rm / rw)
+
     def gather_time(self, fmt: str, elems_per_layer: int, n_layers: int,
                     m: int, quant_block: int, compute_itemsize: int,
-                    reshard: bool = True) -> float:
+                    reshard: bool = True, mode: str = "xla") -> float:
         """Predicted per-step parameter-gather seconds for one group under
-        store format ``fmt`` (forward + backward re-gather when
-        resharding)."""
+        store format ``fmt`` and gather mode ``mode`` (forward + backward
+        re-gather when resharding)."""
         gathers = 2.0 if reshard else 1.0
+        measured = self._measured_time("gather", fmt, mode,
+                                       elems_per_layer, m)
+        if measured is not None:
+            t = gathers * n_layers * measured
+            if not self.profile.end_to_end and fmt == "q8_block":
+                deq = elems_per_layer * (
+                    1 + 4.0 / quant_block + compute_itemsize)
+                t += gathers * n_layers * deq / self.hbm_bw
+            return t
         store = ParamStore(fmt, quant_block)
         wire_dtype = np.dtype(np.float32 if compute_itemsize == 4
                               else np.float16)  # itemsize is all that matters
         wire = store.wire_bytes(elems_per_layer, wire_dtype)
         ring = (m - 1) / m if m > 1 else 0.0
         t = gathers * n_layers * (
-            wire * ring / self.ici_bw + self.gather_latency_s)
+            wire * ring / self.ici_bw + self._latency(mode, m))
         if store.quantized:
             # local dequant traffic: codes+scales in, compute-dtype out
             deq = elems_per_layer * (1 + 4.0 / quant_block + compute_itemsize)
@@ -640,13 +767,32 @@ class CostModel:
 
     def choose_store(self, elems_per_layer: int, n_layers: int, m: int,
                      quant_block: int, compute_itemsize: int,
-                     reshard: bool = True) -> str:
+                     reshard: bool = True, mode: str = "xla") -> str:
         best, best_t = None, None
         for fmt in self.CANDIDATES:
             t = self.gather_time(fmt, elems_per_layer, n_layers, m,
-                                 quant_block, compute_itemsize, reshard)
+                                 quant_block, compute_itemsize, reshard,
+                                 mode)
             if best_t is None or t < best_t:
                 best, best_t = fmt, t
+        return best
+
+    def choose_gather(self, elems_per_layer: int, n_layers: int, m: int,
+                      quant_block: int, compute_itemsize: int,
+                      reshard: bool = True) -> tuple[str, str]:
+        """Joint (store format, gather mode) choice, strict-less-than with
+        fmt-major, xla-first iteration order -- so under the builtin
+        roofline (where the ring route never strictly beats the xla
+        collective: same wire volume, >= issue latency at m >= 2) every
+        decision matches the historical per-format ``choose_store``."""
+        best, best_t = None, None
+        for fmt in self.CANDIDATES:
+            for mode in self.GATHER_MODES:
+                t = self.gather_time(fmt, elems_per_layer, n_layers, m,
+                                     quant_block, compute_itemsize, reshard,
+                                     mode)
+                if best_t is None or t < best_t:
+                    best, best_t = (fmt, mode), t
         return best
 
     # ---- reduce direction (the gradient wire) ---------------------------- #
@@ -657,29 +803,36 @@ class CostModel:
 
     def reduce_time(self, fmt: Optional[str], elems_per_layer: int,
                     n_layers: int, m: int, quant_block: int,
-                    compute_itemsize: int) -> float:
+                    compute_itemsize: int,
+                    mode: Optional[str] = None) -> float:
         """Predicted per-step gradient reduce-scatter seconds for one group
         under reduce wire ``fmt`` (one reduce per layer per step).  The
         quantized wire pays local encode/decode HBM traffic plus the
         error-feedback residual read+write (fp32, contribution-sized) --
-        the roofline now prices *both* comm directions, so the auto
-        planner only takes the q8 gradient wire where the step is
-        genuinely wire-bound.
+        the roofline prices *both* comm directions, so the auto planner
+        only takes the q8 gradient wire where the step is genuinely
+        wire-bound.
 
-        The (m-1)/m ring volume here models the bandwidth-optimal routes:
-        psum_scatter / ring_acc.  The *order-exact* q8 route
-        (reduce_mode="match") ships un-reduced chunks at (m-1)/2 x the
-        payload -- the price of bitwise reproducibility -- so
-        ``auto_policies`` pairs a q8 reduce wire with
-        ``reduce_mode="ring_acc"``, the configuration this price is true
-        of (DESIGN.md §Wire formats)."""
+        ``mode`` is the reduce *route*: "xla" (psum_scatter), "ring"
+        (order-exact), "ring_acc" (accumulate-in-flight).  None picks the
+        route ``auto_policies`` would pair with the wire: xla for the cast
+        wire, ring_acc for q8 -- the (m-1)/m volume here models the
+        bandwidth-optimal routes this pairing lands on (the order-exact
+        match-mode q8 route ships (m-1)/2 x the payload; DESIGN.md §Wire
+        formats)."""
         from .wire import WireCodec
 
         codec = (WireCodec("q8_block", quant_block) if fmt == "q8_block"
                  else WireCodec("fp32" if compute_itemsize == 4 else "bf16"))
+        if mode is None:
+            mode = "ring_acc" if codec.quantized else "xla"
+        measured = self._measured_time("reduce", codec.fmt, mode,
+                                       elems_per_layer, m)
+        if measured is not None and self.profile.end_to_end:
+            return n_layers * measured
         wire = codec.wire_bytes(elems_per_layer)
         ring = (m - 1) / m if m > 1 else 0.0
-        t = n_layers * (wire * ring / self.ici_bw + self.gather_latency_s)
+        t = n_layers * (wire * ring / self.ici_bw + self._latency(mode, m))
         if codec.quantized:
             # encode (read fp32 ct + ef, write codes+scales+ef) and decode
             # (read m contributions' codes+scales, write the fp32 shard)
@@ -698,6 +851,20 @@ class CostModel:
                                  quant_block, compute_itemsize)
             if best_t is None or t < best_t:
                 best, best_t = fmt, t
+        return best
+
+    # ---- ring chunking --------------------------------------------------- #
+    def choose_ring_chunk(self, direction: str, fmt: str,
+                          shard_elems: int) -> Optional[int]:
+        """The ring message size for a group whose route is a manual ring,
+        from the measured profile's chunk-size curve (None = keep the
+        shard-sized default -- always the answer under the builtin
+        roofline, which has no chunk sweep to search)."""
+        if not self.measured:
+            return None
+        best = self.profile.best_ring_chunk(direction, fmt)
+        if best is None or best >= shard_elems:
+            return None
         return best
 
 
@@ -728,9 +895,9 @@ def auto_policies(model, axis_sizes: Mapping[str, int],
                 master_bytes <= cm.replicate_bytes):
             pol = dataclasses.replace(default, sharded=False)
         else:
-            fmt = cm.choose_store(elems, n_layers, m, cfg.quant_block,
-                                  cd.itemsize,
-                                  reshard=default.reshard_after_forward)
+            fmt, gmode = cm.choose_gather(elems, n_layers, m,
+                                          cfg.quant_block, cd.itemsize,
+                                          reshard=default.reshard_after_forward)
             # price the gradient direction too: bandwidth-bound stacks take
             # the QSDP q8 gradient wire (error feedback keeps convergence
             # at full-precision quality; see DESIGN.md §Wire formats).
@@ -745,13 +912,28 @@ def auto_policies(model, axis_sizes: Mapping[str, int],
                      else cm.choose_reduce_wire(elems, n_layers, m,
                                                 cfg.quant_block,
                                                 cd.itemsize))
-            pol = dataclasses.replace(default, store=fmt, reduce_wire=rwire)
+            pol = dataclasses.replace(default, store=fmt, gather_mode=gmode,
+                                      reduce_wire=rwire)
             if rwire == "q8_block":
                 # the cost model prices the bandwidth-optimal route; the
                 # order-exact match-mode q8 routing ships (m-1)/2 x the
                 # payload, so pair the quantized gradient wire with the
                 # accumulate-in-flight ring it is actually cheap on
                 pol = dataclasses.replace(pol, reduce_mode="ring_acc")
+            # the chunking knob only exists on the manual ring routes; a
+            # measured profile's chunk-size curve picks the message size
+            # (the shard snap happens in core.wire, so elems-per-layer is a
+            # safe upper-bound argument here)
+            chunk = None
+            if pol.gather_mode == "ring":
+                chunk = cm.choose_ring_chunk("gather", fmt, elems // max(m, 1))
+            elif pol.reduce_mode == "ring_acc" or pol.reduce_wire == "q8_block":
+                rfmt = pol.reduce_wire or ("fp32" if cd.itemsize == 4
+                                           else "bf16")
+                chunk = cm.choose_ring_chunk("reduce", rfmt,
+                                             elems // max(m, 1))
+            if chunk is not None:
+                pol = dataclasses.replace(pol, ring_chunk_elems=int(chunk))
         if pol != default:
             rules.append(PolicyRule(match=name, policy=pol))
     return PolicySet(rules=tuple(rules), default=default)
@@ -798,6 +980,28 @@ def _group_shape(name: str, gdef, par, axis_sizes: Mapping[str, int]):
     _, _, local_specs, fsdp_axes = _group_axes(name, gdef, par, axis_sizes)
     m = int(np.prod([axis_sizes[a] for a in fsdp_axes])) or 1
     return sum(s.size for s in local_specs), m, fsdp_axes
+
+
+def _price_entry(cm: CostModel, e: GroupPlanEntry, compute_itemsize: int
+                 ) -> float:
+    """Predicted per-step comm seconds (both directions) of one resolved
+    group entry under ``cm`` -- the figure the pricing table and the
+    describe() auto/builtin columns show.  Replicated groups price as 0
+    (no gather; their psum is shared with every candidate)."""
+    if not e.fsdp_axes:
+        return 0.0
+    elems = sum(s.size for s in e.local_specs)
+    n_layers = e.n_layers or 1
+    m = e.fsdp_world
+    pol = e.policy
+    t = cm.gather_time(pol.store, elems, n_layers, m, e.quant_block,
+                       compute_itemsize, reshard=pol.reshard_after_forward,
+                       mode=pol.gather_mode)
+    rmode = ("ring_acc" if pol.reduce_mode == "ring_acc"
+             else pol.gather_mode)
+    t += cm.reduce_time(pol.reduce_wire, elems, n_layers, m, e.quant_block,
+                        compute_itemsize, mode=rmode)
+    return t
 
 
 def _resolve_policies(policies, model, axis_sizes, compute_dtype,
@@ -904,9 +1108,28 @@ def plan(model, mesh, policies=None, *, planner: str = "ragged",
         raise ValueError(
             f"policy rules matched no communication group: {unmatched}; "
             f"this model's groups: {sorted(entries)}")
+    profile_name, profile_hash = "none", ""
+    pricing: dict[str, dict[str, float]] = {}
+    if policies == "auto":
+        # record which profile priced the decisions (reproducibility +
+        # drift detection) and the measured-vs-builtin price of each
+        # chosen policy (describe() renders them side by side)
+        cm = cost_model or CostModel.default()
+        prof = cm.provenance_profile()
+        profile_name, profile_hash = prof.name, prof.content_hash()
+        builtin_cm = CostModel.default()
+        for name, e in entries.items():
+            pricing[name] = {
+                "auto_ms": round(
+                    _price_entry(cm, e, cd.itemsize) * 1e3, 6),
+                "builtin_ms": round(
+                    _price_entry(builtin_cm, e, cd.itemsize) * 1e3, 6),
+            }
     return ShardingPlan(base=pset.default, groups=entries,
                         axis_sizes=axis_sizes, planner=planner,
-                        compute_dtype=cd.name)
+                        compute_dtype=cd.name,
+                        profile_name=profile_name,
+                        profile_hash=profile_hash, pricing=pricing)
 
 
 # alias for call sites where ``plan`` the name is taken by a local

@@ -172,7 +172,7 @@ _REDUCE_MODES = ("match", "ring_acc")
 # schedule.
 GROUP_OVERRIDE_KEYS = frozenset(
     {"gather_mode", "gather_dtype", "reduce_dtype", "sharded",
-     "reduce_mode", "param_store", "reduce_wire"})
+     "reduce_mode", "param_store", "reduce_wire", "ring_chunk_elems"})
 
 
 def _check_name(name: str | None) -> None:
@@ -225,6 +225,16 @@ class CommSchedule:
     param_store: str = "fp32"
     reduce_wire: str | None = None
     sharded: bool = True
+    # max elements per ring message for the manual ppermute routes (ring
+    # gather, order-exact ring reduce, ring_acc, and the q8 reduce rings).
+    # None = one shard-sized message per hop (the legacy behavior).  Any
+    # positive value is legal: core.wire snaps it to the largest divisor of
+    # the shard size (block-aligned for q8 payloads), and chunking is
+    # bitwise-neutral *within* every mode pair -- it changes message
+    # granularity, never per-element contributions or accumulation order.
+    # The autotuner sets this per group from a measured profile's
+    # chunk-size curve (core.profile / CostModel.from_profile).
+    ring_chunk_elems: int | None = None
     # serve-only: run eligible gathered q8_block weights through the
     # int8 x int8 GEMM (kernels.q8_matmul) instead of dequantizing the
     # all-gather -- the weight never materializes in the compute dtype.
@@ -255,6 +265,20 @@ class CommSchedule:
             raise ValueError(
                 f"unknown param_store {self.param_store!r}; expected one of "
                 f"{list(STORE_FORMATS)}")
+        if self.ring_chunk_elems is not None:
+            if (not isinstance(self.ring_chunk_elems, int)
+                    or isinstance(self.ring_chunk_elems, bool)
+                    or self.ring_chunk_elems < 1):
+                raise ValueError(
+                    f"ring_chunk_elems must be a positive int or None, got "
+                    f"{self.ring_chunk_elems!r}")
+            if (self.gather_mode != "ring" and self.reduce_mode != "ring_acc"
+                    and self.reduce_wire != "q8_block"):
+                raise ValueError(
+                    "ring_chunk_elems only affects the manual ring routes; "
+                    "this schedule has none (gather_mode='xla', "
+                    "reduce_mode='match', cast reduce wire) -- drop the "
+                    "knob or pick a ring mode")
 
     @classmethod
     def default(cls) -> "CommSchedule":
@@ -365,7 +389,9 @@ class CommSchedule:
                 f"rmode={self.reduce_mode} "
                 f"store={self.param_store} "
                 f"gather={self.gather_dtype or 'compute'} "
-                f"reduce={self.reduce_wire or self.reduce_dtype or 'wire'}")
+                f"reduce={self.reduce_wire or self.reduce_dtype or 'wire'}"
+                + (f" chunk={self.ring_chunk_elems}"
+                   if self.ring_chunk_elems is not None else ""))
 
 
 def resolve_group_schedules(base: CommSchedule, overrides) -> dict:

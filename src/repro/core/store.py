@@ -328,6 +328,7 @@ class ParamStore:
         once at the boundary -- see core.wire)."""
         cd = jnp.dtype(compute_dtype)
         rcodec = sched.reduce_codec(cd, self.block)
+        rc = sched.ring_chunk_elems
         ef = state[EF_KEY] if self.has_ef else None
         if defer_ef and ef is None:
             raise ValueError("defer_ef on a store without an EF residual")
@@ -338,24 +339,24 @@ class ParamStore:
             if ef is None:
                 return codec_gather(flat, axes, axis_sizes, gcodec, rcodec,
                                     cd, pdt, sched.gather_mode,
-                                    sched.reduce_mode)
+                                    sched.reduce_mode, rc)
             prim = codec_gather_defer_ef if defer_ef else codec_gather_ef
             return prim(flat, ef, axes, axis_sizes, gcodec,
                         rcodec, cd, pdt, sched.gather_mode,
-                        sched.reduce_mode)
+                        sched.reduce_mode, rc)
         deq = WireCodec("q8_block", self.block).decode(
             self.gather_payload(state, axes, axis_sizes, sched), cd)
         f32 = jnp.dtype(jnp.float32)
         if ef is None:
             proxy = codec_grad_proxy(state["master"], axes, axis_sizes,
                                      rcodec, cd, f32, sched.gather_mode,
-                                     sched.reduce_mode)
+                                     sched.reduce_mode, rc)
         else:
             prim = (codec_grad_proxy_defer_ef if defer_ef
                     else codec_grad_proxy_ef)
             proxy = prim(state["master"], ef, axes,
                          axis_sizes, rcodec, cd, f32,
-                         sched.gather_mode, sched.reduce_mode)
+                         sched.gather_mode, sched.reduce_mode, rc)
         return deq + proxy
 
     def gather_payload(self, state, axes: tuple[str, ...],
@@ -368,11 +369,14 @@ class ParamStore:
         if not self.quantized:
             raise ValueError(
                 f"gather_payload on a {self.fmt!r} store (quantized only)")
+        rc = sched.ring_chunk_elems
         return {
             "codes": payload_all_gather(state["codes"], axes, axis_sizes,
-                                        sched.gather_mode),
+                                        sched.gather_mode, rc),
             "scales": payload_all_gather(state["scales"], axes, axis_sizes,
-                                         sched.gather_mode),
+                                         sched.gather_mode,
+                                         max(rc // self.block, 1)
+                                         if rc else None),
         }
 
     # ------------------------------------------------------------------ #

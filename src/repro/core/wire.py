@@ -182,14 +182,50 @@ def _ring_axis(axes: tuple[str, ...]):
     return axes if len(axes) != 1 else axes[0]
 
 
-def _ring_all_gather(x, axes: tuple[str, ...], axis_sizes: tuple[int, ...]):
+def _snap_chunk(rows: int, chunk, unit: int = 1) -> int:
+    """Snap a requested ring-chunk size (``ring_chunk_elems``) onto the
+    largest divisor of ``rows`` that is <= ``chunk`` and a multiple of
+    ``unit`` (the quant block for q8 payloads, so blocks never straddle a
+    ring message).  ``None`` / anything >= ``rows`` means the shard-sized
+    default -- no splitting.  Deterministic and host-side, so the knob can
+    hold any positive value and still lower to a legal message size."""
+    if chunk is None or int(chunk) >= rows or rows % unit:
+        return rows
+    target = max(int(chunk), unit)
+    best = 0
+    i = 1
+    while i * i <= rows:
+        if rows % i == 0:
+            for d in (i, rows // i):
+                if d <= target and d % unit == 0 and d > best:
+                    best = d
+        i += 1
+    return best or rows
+
+
+def _ring_all_gather(x, axes: tuple[str, ...], axis_sizes: tuple[int, ...],
+                     ring_chunk=None):
     """Chunked ring all-gather over the flattened ``axes`` group: n-1
     ``ppermute`` hops, each forwarding one shard-sized chunk, written into
     the tiled output at absolute device offsets.  Pure data movement, so
-    bitwise identical to ``lax.all_gather(..., tiled=True)``."""
+    bitwise identical to ``lax.all_gather(..., tiled=True)``.
+
+    ``ring_chunk`` (elements, i.e. leading-axis rows) splits each ring
+    message into equal sub-chunks pipelined as independent rings -- still
+    pure data movement, so still bitwise, at any chunk size."""
     n = math.prod(axis_sizes)
     if n == 1:
         return x
+    sub = _snap_chunk(x.shape[0], ring_chunk)
+    if sub != x.shape[0]:
+        k = x.shape[0] // sub
+        parts = [_ring_all_gather(x[i * sub:(i + 1) * sub], axes, axis_sizes)
+                 for i in range(k)]
+        # part i holds every device's rows [i*sub, (i+1)*sub); interleave
+        # back to the tiled (device-major) layout of the unchunked gather
+        stacked = jnp.stack(
+            [p.reshape((n, sub) + x.shape[1:]) for p in parts], axis=1)
+        return stacked.reshape((n * x.shape[0],) + x.shape[1:])
     ax = _ring_axis(axes)
     idx = lax.axis_index(ax)
     perm = [((i + 1) % n, i) for i in range(n)]  # receive from the right
@@ -204,8 +240,15 @@ def _ring_all_gather(x, axes: tuple[str, ...], axis_sizes: tuple[int, ...]):
     return out
 
 
+def _split_cols(buf, n: int, k: int, sub: int):
+    # view the (n*c, ...) buffer as (n, k, sub, ...) and yield column i as
+    # an (n*sub, ...) buffer -- one independent sub-ring per column
+    cols = buf.reshape((n, k, sub) + buf.shape[1:])
+    return [cols[:, i].reshape((n * sub,) + buf.shape[1:]) for i in range(k)]
+
+
 def _ring_reduce_scatter(ct, axes: tuple[str, ...],
-                         axis_sizes: tuple[int, ...]):
+                         axis_sizes: tuple[int, ...], ring_chunk=None):
     """Ring reduce-scatter matching ``lax.psum_scatter`` bitwise.
 
     Chunks are routed *un-reduced* to their destination device -- each hop
@@ -217,10 +260,20 @@ def _ring_reduce_scatter(ct, axes: tuple[str, ...],
     is what makes ring mode bitwise identical to xla mode.  Wire volume is
     sum(n-1-k) = n(n-1)/2 chunks vs the accumulate-in-flight ring's n-1:
     the cost of order-exactness, acceptable at repro scale and documented
-    for paper scale."""
+    for paper scale.
+
+    ``ring_chunk`` splits each destination chunk into equal sub-chunks run
+    as independent sub-rings; every element keeps the same contributions in
+    the same accumulation order, so chunking stays bitwise here."""
     n = math.prod(axis_sizes)
     if n == 1:
         return ct
+    c = ct.shape[0] // n
+    sub = _snap_chunk(c, ring_chunk)
+    if sub != c:
+        outs = [_ring_reduce_scatter(col, axes, axis_sizes)
+                for col in _split_cols(ct, n, c // sub, sub)]
+        return jnp.concatenate(outs, axis=0)
     ax = _ring_axis(axes)
     idx = lax.axis_index(ax)
     perm = [((i + 1) % n, i) for i in range(n)]  # receive from the right
@@ -246,7 +299,7 @@ def _ring_reduce_scatter(ct, axes: tuple[str, ...],
 
 
 def _ring_acc_reduce_scatter(ct, axes: tuple[str, ...],
-                             axis_sizes: tuple[int, ...]):
+                             axis_sizes: tuple[int, ...], ring_chunk=None):
     """Accumulate-in-flight ring reduce-scatter (reduce_mode="ring_acc").
 
     One partial sum per destination chunk rides the ring: the chain for
@@ -256,10 +309,21 @@ def _ring_acc_reduce_scatter(ct, axes: tuple[str, ...],
     The accumulation order is ring order (d-1, d-2, ..., d+1, d), NOT XLA's
     absolute device order, and it runs in the dtype ``ct`` arrives in (the
     schedule's reduce dtype): results are allclose to, but not bitwise
-    reproducible against, the match-mode reduce-scatter."""
+    reproducible against, the match-mode reduce-scatter.
+
+    ``ring_chunk`` splits each destination chunk into independent
+    sub-rings; each element's additions keep the same ring order and
+    dtype, so chunking is bitwise-neutral *within* this mode (the mode
+    itself stays in the allclose class vs match)."""
     n = math.prod(axis_sizes)
     if n == 1:
         return ct
+    c = ct.shape[0] // n
+    sub = _snap_chunk(c, ring_chunk)
+    if sub != c:
+        outs = [_ring_acc_reduce_scatter(col, axes, axis_sizes)
+                for col in _split_cols(ct, n, c // sub, sub)]
+        return jnp.concatenate(outs, axis=0)
     ax = _ring_axis(axes)
     idx = lax.axis_index(ax)
     perm = [((i + 1) % n, i) for i in range(n)]  # receive from the right
@@ -296,8 +360,17 @@ def _q8_chunks(codes, scales, axes, axis_sizes, block):
     return n, idx, cch, sch
 
 
+def _q8_split_cols(payload, block: int, n: int, k: int, sub: int):
+    # per-destination sub-chunk columns of an encoded payload: codes in
+    # rows, scales in rows/block -- sub is block-aligned (_snap_chunk unit)
+    ccols = _split_cols(payload["codes"], n, k, sub)
+    scols = _split_cols(payload["scales"], n, k, sub // block)
+    return [{"codes": c, "scales": s} for c, s in zip(ccols, scols)]
+
+
 def _q8_route_reduce_scatter(payload, block: int, axes: tuple[str, ...],
-                             axis_sizes: tuple[int, ...]) -> jax.Array:
+                             axis_sizes: tuple[int, ...],
+                             ring_chunk=None) -> jax.Array:
     """Order-exact quantized reduce-scatter (reduce_mode="match").
 
     The mirror of ``_ring_reduce_scatter`` with an int8 payload: quantized
@@ -307,11 +380,19 @@ def _q8_route_reduce_scatter(payload, block: int, axes: tuple[str, ...],
     once at the source and the accumulation order is device order, this
     path is bitwise identical for xla and ring gather modes (there is no
     XLA collective that dequant-accumulates, so both modes route manually).
-    Returns the fp32 shard."""
+    Returns the fp32 shard.  ``ring_chunk`` (block-aligned sub-chunks, see
+    ``_snap_chunk``) keeps per-element contributions and device-order
+    accumulation unchanged -- bitwise-neutral."""
     codes, scales = payload["codes"], payload["scales"]
     n = math.prod(axis_sizes)
     if n == 1:
         return ops.dequantize(codes, scales, block)
+    c = codes.shape[0] // n
+    sub = _snap_chunk(c, ring_chunk, unit=block)
+    if sub != c:
+        outs = [_q8_route_reduce_scatter(col, block, axes, axis_sizes)
+                for col in _q8_split_cols(payload, block, n, c // sub, sub)]
+        return jnp.concatenate(outs, axis=0)
     ax = _ring_axis(axes)
     perm = [((i + 1) % n, i) for i in range(n)]
     n, idx, cch, sch = _q8_chunks(codes, scales, axes, axis_sizes, block)
@@ -332,7 +413,8 @@ def _q8_route_reduce_scatter(payload, block: int, axes: tuple[str, ...],
 
 
 def _q8_ring_acc_reduce_scatter(payload, block: int, axes: tuple[str, ...],
-                                axis_sizes: tuple[int, ...]) -> jax.Array:
+                                axis_sizes: tuple[int, ...],
+                                ring_chunk=None) -> jax.Array:
     """Accumulate-in-flight quantized reduce-scatter
     (reduce_mode="ring_acc"): the partial sum rides the ring *quantized*
     (n-1 chunk-hops of codes + scales) and every hop dequantizes, adds the
@@ -340,11 +422,20 @@ def _q8_ring_acc_reduce_scatter(payload, block: int, axes: tuple[str, ...],
     requantization error of partial sums is NOT error-compensated (only
     the one-time contribution encoding is, see ``codec_gather_ef``);
     accumulation order is ring order -- allclose, not bitwise, vs the
-    match-mode rule.  Returns the fp32 shard."""
+    match-mode rule.  Returns the fp32 shard.  ``ring_chunk`` sub-rings
+    keep each element's dequant/add/requant sequence unchanged (per-block
+    quantization never crosses the block-aligned sub-chunk boundary), so
+    chunking is bitwise-neutral within this mode."""
     codes, scales = payload["codes"], payload["scales"]
     n = math.prod(axis_sizes)
     if n == 1:
         return ops.dequantize(codes, scales, block)
+    c = codes.shape[0] // n
+    sub = _snap_chunk(c, ring_chunk, unit=block)
+    if sub != c:
+        outs = [_q8_ring_acc_reduce_scatter(col, block, axes, axis_sizes)
+                for col in _q8_split_cols(payload, block, n, c // sub, sub)]
+        return jnp.concatenate(outs, axis=0)
     ax = _ring_axis(axes)
     perm = [((i + 1) % n, i) for i in range(n)]
     n, idx, cch, sch = _q8_chunks(codes, scales, axes, axis_sizes, block)
@@ -363,21 +454,23 @@ def _q8_ring_acc_reduce_scatter(payload, block: int, axes: tuple[str, ...],
 # --------------------------------------------------------------------------- #
 # the reduce-combine dispatch
 # --------------------------------------------------------------------------- #
-def dtype_reduce_scatter(g, axes, axis_sizes, mode, reduce_mode):
+def dtype_reduce_scatter(g, axes, axis_sizes, mode, reduce_mode,
+                         ring_chunk=None):
     """The cast-codec gradient reduce-scatter: accumulate-in-flight ring
     when reduce_mode says so, else the gather mode's bitwise-exact match
-    (psum_scatter for xla, the order-exact ring for ring)."""
+    (psum_scatter for xla, the order-exact ring for ring).  ``ring_chunk``
+    applies only to the ring routes; the xla collective ignores it."""
     if not axes:
         return g
     if reduce_mode == "ring_acc":
-        return _ring_acc_reduce_scatter(g, axes, axis_sizes)
+        return _ring_acc_reduce_scatter(g, axes, axis_sizes, ring_chunk)
     if mode == "ring":
-        return _ring_reduce_scatter(g, axes, axis_sizes)
+        return _ring_reduce_scatter(g, axes, axis_sizes, ring_chunk)
     return lax.psum_scatter(g, axes, scatter_dimension=0, tiled=True)
 
 
 def codec_reduce_scatter(ct, ef, codec: WireCodec, axes, axis_sizes, mode,
-                         reduce_mode, param_dtype):
+                         reduce_mode, param_dtype, ring_chunk=None):
     """Reduce-scatter a cotangent through ``codec`` -- THE reduce-combine
     rule of the wire layer.  Returns ``(shard, new_ef)``.
 
@@ -397,7 +490,7 @@ def codec_reduce_scatter(ct, ef, codec: WireCodec, axes, axis_sizes, mode,
                 f"error feedback is only defined for quantized reduce "
                 f"wires, got codec {codec.fmt!r}")
         g = dtype_reduce_scatter(ct.astype(codec.dtype), axes, axis_sizes,
-                                 mode, reduce_mode)
+                                 mode, reduce_mode, ring_chunk)
         return g.astype(param_dtype), None
     if ef is not None:
         # fused EF-add + encode + residual update in one kernel pass;
@@ -410,35 +503,45 @@ def codec_reduce_scatter(ct, ef, codec: WireCodec, axes, axis_sizes, mode,
         new_ef = None
     if reduce_mode == "ring_acc":
         shard = _q8_ring_acc_reduce_scatter(payload, codec.block, axes,
-                                            axis_sizes)
+                                            axis_sizes, ring_chunk)
     else:
         shard = _q8_route_reduce_scatter(payload, codec.block, axes,
-                                         axis_sizes)
+                                         axis_sizes, ring_chunk)
     return shard.astype(param_dtype), new_ef
 
 
 # --------------------------------------------------------------------------- #
 # payload all-gather (pure data movement)
 # --------------------------------------------------------------------------- #
-def payload_all_gather(x, axes, axis_sizes, mode):
+def payload_all_gather(x, axes, axis_sizes, mode, ring_chunk=None):
     """Pure data-movement all-gather for non-differentiable wire payloads
     (int8 codes, per-block scales): gathered in ``x``'s own dtype, no VJP --
     gradients for a quantized store flow through ``codec_grad_proxy``
-    instead (straight-through to the master shard)."""
+    instead (straight-through to the master shard).  ``ring_chunk``
+    applies only to the ring route (per-payload message size)."""
     x = lax.stop_gradient(x)
     if not axes:
         return x
-    return (_ring_all_gather(x, axes, axis_sizes) if mode == "ring"
-            else lax.all_gather(x, axes, tiled=True))
+    return (_ring_all_gather(x, axes, axis_sizes, ring_chunk)
+            if mode == "ring" else lax.all_gather(x, axes, tiled=True))
 
 
 # --------------------------------------------------------------------------- #
 # the gather/reduce-scatter primitives
 # --------------------------------------------------------------------------- #
-@partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4, 5, 6, 7, 8))
+def _leaf_chunk(ring_chunk, leaf_rows: int, rows: int):
+    # ring_chunk is stated in logical buffer elements (codes rows); scale
+    # it for payload leaves with a different row density (q8 scales are
+    # rows/block) so codes and scales messages stay congruent
+    if ring_chunk is None or leaf_rows == rows:
+        return ring_chunk
+    return max(int(ring_chunk) * leaf_rows // max(rows, 1), 1)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4, 5, 6, 7, 8, 9))
 def codec_gather(x, axes, axis_sizes, gather_codec: WireCodec,
                  reduce_codec: WireCodec, out_dtype, param_dtype, mode,
-                 reduce_mode):
+                 reduce_mode, ring_chunk=None):
     """All-gather ``x`` (a device-local flat buffer slice, leading axis
     tiled) over the FSDP mesh ``axes`` (sizes ``axis_sizes``).
 
@@ -448,33 +551,40 @@ def codec_gather(x, axes, axis_sizes, gather_codec: WireCodec,
     backward: ``reduce_codec`` reduce-scatter of the cotangent (the ZeRO-3
               gradient reduce-scatter; see ``codec_reduce_scatter``) ->
               cast to ``param_dtype``
+
+    ``ring_chunk`` (``CommSchedule.ring_chunk_elems``) bounds the ring
+    message size in both directions; ``None`` is the shard-sized legacy
+    default and every value is bitwise-neutral within the mode pair.
     """
     payload = gather_codec.encode(x)
     gathered = jax.tree.map(
-        lambda p: payload_all_gather(p, axes, axis_sizes, mode), payload)
+        lambda p: payload_all_gather(
+            p, axes, axis_sizes, mode,
+            _leaf_chunk(ring_chunk, p.shape[0], x.shape[0])), payload)
     return gather_codec.decode(gathered, out_dtype)
 
 
 def _cgather_fwd(x, axes, axis_sizes, gather_codec, reduce_codec, out_dtype,
-                 param_dtype, mode, reduce_mode):
+                 param_dtype, mode, reduce_mode, ring_chunk=None):
     return (codec_gather(x, axes, axis_sizes, gather_codec, reduce_codec,
-                         out_dtype, param_dtype, mode, reduce_mode), None)
+                         out_dtype, param_dtype, mode, reduce_mode,
+                         ring_chunk), None)
 
 
 def _cgather_bwd(axes, axis_sizes, gather_codec, reduce_codec, out_dtype,
-                 param_dtype, mode, reduce_mode, _res, ct):
+                 param_dtype, mode, reduce_mode, ring_chunk, _res, ct):
     g, _ = codec_reduce_scatter(ct, None, reduce_codec, axes, axis_sizes,
-                                mode, reduce_mode, param_dtype)
+                                mode, reduce_mode, param_dtype, ring_chunk)
     return (g,)
 
 
 codec_gather.defvjp(_cgather_fwd, _cgather_bwd)
 
 
-@partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5, 6, 7, 8, 9))
+@partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5, 6, 7, 8, 9, 10))
 def codec_gather_ef(x, ef, axes, axis_sizes, gather_codec: WireCodec,
                     reduce_codec: WireCodec, out_dtype, param_dtype, mode,
-                    reduce_mode):
+                    reduce_mode, ring_chunk=None):
     """``codec_gather`` with an error-feedback residual threaded through
     the quantized reduce wire.
 
@@ -487,20 +597,24 @@ def codec_gather_ef(x, ef, axes, axis_sizes, gather_codec: WireCodec,
     ``(grad_shard, new_residual)``."""
     del ef
     return codec_gather(x, axes, axis_sizes, gather_codec, reduce_codec,
-                        out_dtype, param_dtype, mode, reduce_mode)
+                        out_dtype, param_dtype, mode, reduce_mode,
+                        ring_chunk)
 
 
 def _cgather_ef_fwd(x, ef, axes, axis_sizes, gather_codec, reduce_codec,
-                    out_dtype, param_dtype, mode, reduce_mode):
+                    out_dtype, param_dtype, mode, reduce_mode,
+                    ring_chunk=None):
     y = codec_gather_ef(x, ef, axes, axis_sizes, gather_codec, reduce_codec,
-                        out_dtype, param_dtype, mode, reduce_mode)
+                        out_dtype, param_dtype, mode, reduce_mode,
+                        ring_chunk)
     return y, ef
 
 
 def _cgather_ef_bwd(axes, axis_sizes, gather_codec, reduce_codec, out_dtype,
-                    param_dtype, mode, reduce_mode, ef, ct):
+                    param_dtype, mode, reduce_mode, ring_chunk, ef, ct):
     g, new_ef = codec_reduce_scatter(ct, ef, reduce_codec, axes, axis_sizes,
-                                     mode, reduce_mode, param_dtype)
+                                     mode, reduce_mode, param_dtype,
+                                     ring_chunk)
     return (g, new_ef)
 
 
@@ -512,9 +626,9 @@ def _proxy_zeros(x, axes, axis_sizes, out_dtype):
     return jnp.zeros((n * x.shape[0],) + x.shape[1:], out_dtype)
 
 
-@partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4, 5, 6, 7))
+@partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4, 5, 6, 7, 8))
 def codec_grad_proxy(x, axes, axis_sizes, reduce_codec: WireCodec, out_dtype,
-                     param_dtype, mode, reduce_mode):
+                     param_dtype, mode, reduce_mode, ring_chunk=None):
     """Straight-through gradient route for quantized stores.
 
     forward: zeros of the gathered shape (no collective, no wire bytes) --
@@ -527,24 +641,26 @@ def codec_grad_proxy(x, axes, axis_sizes, reduce_codec: WireCodec, out_dtype,
 
 
 def _proxy_fwd(x, axes, axis_sizes, reduce_codec, out_dtype, param_dtype,
-               mode, reduce_mode):
+               mode, reduce_mode, ring_chunk=None):
     return (codec_grad_proxy(x, axes, axis_sizes, reduce_codec, out_dtype,
-                             param_dtype, mode, reduce_mode), None)
+                             param_dtype, mode, reduce_mode, ring_chunk),
+            None)
 
 
 def _proxy_bwd(axes, axis_sizes, reduce_codec, out_dtype, param_dtype, mode,
-               reduce_mode, _res, ct):
+               reduce_mode, ring_chunk, _res, ct):
     g, _ = codec_reduce_scatter(ct, None, reduce_codec, axes, axis_sizes,
-                                mode, reduce_mode, param_dtype)
+                                mode, reduce_mode, param_dtype, ring_chunk)
     return (g,)
 
 
 codec_grad_proxy.defvjp(_proxy_fwd, _proxy_bwd)
 
 
-@partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5, 6, 7, 8))
+@partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5, 6, 7, 8, 9))
 def codec_grad_proxy_ef(x, ef, axes, axis_sizes, reduce_codec: WireCodec,
-                        out_dtype, param_dtype, mode, reduce_mode):
+                        out_dtype, param_dtype, mode, reduce_mode,
+                        ring_chunk=None):
     """``codec_grad_proxy`` with the error-feedback residual threaded
     through, for quantized stores whose *reduce* wire is also quantized
     (q8 payload both directions -- the full QSDP configuration)."""
@@ -553,16 +669,17 @@ def codec_grad_proxy_ef(x, ef, axes, axis_sizes, reduce_codec: WireCodec,
 
 
 def _proxy_ef_fwd(x, ef, axes, axis_sizes, reduce_codec, out_dtype,
-                  param_dtype, mode, reduce_mode):
+                  param_dtype, mode, reduce_mode, ring_chunk=None):
     y = codec_grad_proxy_ef(x, ef, axes, axis_sizes, reduce_codec, out_dtype,
-                            param_dtype, mode, reduce_mode)
+                            param_dtype, mode, reduce_mode, ring_chunk)
     return y, ef
 
 
 def _proxy_ef_bwd(axes, axis_sizes, reduce_codec, out_dtype, param_dtype,
-                  mode, reduce_mode, ef, ct):
+                  mode, reduce_mode, ring_chunk, ef, ct):
     g, new_ef = codec_reduce_scatter(ct, ef, reduce_codec, axes, axis_sizes,
-                                     mode, reduce_mode, param_dtype)
+                                     mode, reduce_mode, param_dtype,
+                                     ring_chunk)
     return (g, new_ef)
 
 
@@ -590,52 +707,57 @@ def _defer_bwd(axes, axis_sizes, param_dtype, ct):
     return shard, ct.astype(jnp.float32)
 
 
-@partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5, 6, 7, 8, 9))
+@partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5, 6, 7, 8, 9, 10))
 def codec_gather_defer_ef(x, ef, axes, axis_sizes, gather_codec: WireCodec,
                           reduce_codec: WireCodec, out_dtype, param_dtype,
-                          mode, reduce_mode):
+                          mode, reduce_mode, ring_chunk=None):
     """``codec_gather_ef`` for microbatch accumulation: the backward defers
     the quantized reduce-scatter, returning (zero shard, ct.f32) so the
-    accumulated cotangent can be encoded once at the boundary."""
+    accumulated cotangent can be encoded once at the boundary (where
+    ``core.fsdp`` applies ``ring_chunk`` to the one real reduce)."""
     del ef
     return codec_gather(x, axes, axis_sizes, gather_codec, reduce_codec,
-                        out_dtype, param_dtype, mode, reduce_mode)
+                        out_dtype, param_dtype, mode, reduce_mode,
+                        ring_chunk)
 
 
 def _cgather_def_fwd(x, ef, axes, axis_sizes, gather_codec, reduce_codec,
-                     out_dtype, param_dtype, mode, reduce_mode):
+                     out_dtype, param_dtype, mode, reduce_mode,
+                     ring_chunk=None):
     y = codec_gather_defer_ef(x, ef, axes, axis_sizes, gather_codec,
                               reduce_codec, out_dtype, param_dtype, mode,
-                              reduce_mode)
+                              reduce_mode, ring_chunk)
     return y, None
 
 
 def _cgather_def_bwd(axes, axis_sizes, gather_codec, reduce_codec, out_dtype,
-                     param_dtype, mode, reduce_mode, _res, ct):
+                     param_dtype, mode, reduce_mode, ring_chunk, _res, ct):
     return _defer_bwd(axes, axis_sizes, param_dtype, ct)
 
 
 codec_gather_defer_ef.defvjp(_cgather_def_fwd, _cgather_def_bwd)
 
 
-@partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5, 6, 7, 8))
+@partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5, 6, 7, 8, 9))
 def codec_grad_proxy_defer_ef(x, ef, axes, axis_sizes,
                               reduce_codec: WireCodec, out_dtype,
-                              param_dtype, mode, reduce_mode):
+                              param_dtype, mode, reduce_mode,
+                              ring_chunk=None):
     """``codec_grad_proxy_ef`` with the deferred (microbatch) backward."""
     del ef
     return _proxy_zeros(x, axes, axis_sizes, out_dtype)
 
 
 def _proxy_def_fwd(x, ef, axes, axis_sizes, reduce_codec, out_dtype,
-                   param_dtype, mode, reduce_mode):
+                   param_dtype, mode, reduce_mode, ring_chunk=None):
     y = codec_grad_proxy_defer_ef(x, ef, axes, axis_sizes, reduce_codec,
-                                  out_dtype, param_dtype, mode, reduce_mode)
+                                  out_dtype, param_dtype, mode, reduce_mode,
+                                  ring_chunk)
     return y, None
 
 
 def _proxy_def_bwd(axes, axis_sizes, reduce_codec, out_dtype, param_dtype,
-                   mode, reduce_mode, _res, ct):
+                   mode, reduce_mode, ring_chunk, _res, ct):
     return _defer_bwd(axes, axis_sizes, param_dtype, ct)
 
 

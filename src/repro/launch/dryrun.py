@@ -111,7 +111,7 @@ def _optimizer_cost(runtime, cfg):
 def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
             planner: str = "ragged", quiet: bool = False,
             calibrate: bool = True, overrides: dict | None = None,
-            policies=None):
+            policies=None, cost_model=None):
     from ..configs import build_model, get_config, supports_shape
     from ..configs.base import SHAPES
     from ..core.policy import make_plan
@@ -139,8 +139,12 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
         # resolve the cost model ONCE on the full model, then pin the
         # resulting per-group decisions as an explicit PolicySet so the
         # 1/2-layer calibration variants compile under identical policies
-        policies = make_plan(build_model(cfg), mesh,
-                             "auto").policy_set()
+        auto = make_plan(build_model(cfg), mesh, "auto",
+                         cost_model=cost_model)
+        if not quiet:
+            # measured-vs-builtin pricing + profile provenance per group
+            print(auto.describe())
+        policies = auto.policy_set()
 
     t0 = time.time()
     compiled, runtime = _compile(cfg, shape, mesh, planner,
@@ -220,7 +224,7 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
 
 
 def plan_only(arch: str, *, multi_pod: bool = False, planner: str = "ragged",
-              policies=None) -> str:
+              policies=None, cost_model=None) -> str:
     """Resolve and print the ShardingPlan without compiling anything --
     plans are auditable in seconds, not compile-minutes.  Planning is pure
     host-side metadata, so this uses the production mesh's axis *sizes*
@@ -236,7 +240,8 @@ def plan_only(arch: str, *, multi_pod: bool = False, planner: str = "ragged",
     cfg = get_config(arch)
     axes = production_axis_sizes(multi_pod=multi_pod)
     model = build_model(cfg)
-    p = make_plan(model, axes, policies, planner=planner)
+    p = make_plan(model, axes, policies, planner=planner,
+                  cost_model=cost_model)
     out = [p.describe()]
     if policies is None:
         explicit = PolicySet.from_parallel_config(cfg.parallel)
@@ -269,6 +274,11 @@ def main():
     ap.add_argument("--plan-only", action="store_true",
                     help="resolve + print the ShardingPlan (and check "
                          "legacy-lowering parity); no compilation")
+    ap.add_argument("--profile", default=None,
+                    help="measured comm profile JSON (BENCH_comm.json from "
+                         "benchmarks.bench_comm); prices --policies auto "
+                         "from the calibrated curves instead of the "
+                         "builtin roofline constants")
     ap.add_argument("--no-calibrate", action="store_true")
     ap.add_argument("--optimized", action="store_true",
                     help="apply the beyond-paper §Perf winners "
@@ -279,12 +289,19 @@ def main():
     from ..configs import ASSIGNED_ARCH_IDS
     from ..configs.base import SHAPES
 
+    cost_model = None
+    if args.profile:
+        from ..core.policy import CostModel
+
+        cost_model = CostModel.from_profile(args.profile)
+
     if args.plan_only:
         archs = ASSIGNED_ARCH_IDS if args.all else [args.arch]
         for arch in archs:
             print(f"== {arch} ==")
             print(plan_only(arch, multi_pod=args.multi_pod,
-                            planner=args.planner, policies=args.policies))
+                            planner=args.planner, policies=args.policies,
+                            cost_model=cost_model))
         return
 
     pairs = (
@@ -308,7 +325,7 @@ def main():
             r = run_one(arch, shape, multi_pod=args.multi_pod,
                         planner=args.planner,
                         calibrate=not args.no_calibrate, overrides=ov,
-                        policies=args.policies)
+                        policies=args.policies, cost_model=cost_model)
             row = r.row()
         except Exception as e:
             traceback.print_exc()

@@ -29,6 +29,11 @@ def main():
                     help="sharding policies: 'auto' runs the structure-"
                          "aware cost model per group (core.policy); default "
                          "lowers the config's legacy knobs")
+    ap.add_argument("--profile", default=None,
+                    help="measured comm profile JSON (BENCH_comm.json from "
+                         "benchmarks.bench_comm): '--policies auto' prices "
+                         "formats and ring chunking from the calibrated "
+                         "curves instead of the builtin roofline")
     ap.add_argument("--optimizer", default=None)
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--ckpt-every", type=int, default=0)
@@ -71,8 +76,13 @@ def main():
         cfg = dataclasses.replace(cfg, parallel=par)
     mesh = make_local_mesh(args.data, args.model)
     model = build_model(cfg)
+    cost_model = None
+    if args.profile:
+        from ..core.policy import CostModel
+
+        cost_model = CostModel.from_profile(args.profile)
     runtime = FSDPRuntime(model, mesh, planner=args.planner,
-                          policies=args.policies)
+                          policies=args.policies, cost_model=cost_model)
     print(runtime.plan.describe())
     optimizer = make_optimizer(cfg)
 
