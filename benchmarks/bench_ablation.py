@@ -100,7 +100,10 @@ class Adam8bitUnplanned(Adam8bit):
             # rank's buffer), replicated across the FSDP axes; EP ranks hold
             # distinct scale sets -> shard the scale dim over the outer axis
             total = lo.outer_size * lo.plan.total
-            assert lo.plan.total % bq == 0, (name, lo.plan.total, bq)
+            if lo.plan.total % bq:
+                raise ValueError(
+                    f"group {name!r}: packed total {lo.plan.total} not a "
+                    f"multiple of quant block {bq} -- planner align missing")
             gshape = ((lo.n_layers, total // bq) if lo.n_layers
                       else (total // bq,))
             entry = lo.outer_axis if lo.outer_axis else None

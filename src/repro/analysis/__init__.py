@@ -1,0 +1,25 @@
+"""Static analysis for the FSDP repro: jaxpr plan verification
+(``repro.analysis.verify``) and source layering lint
+(``repro.analysis.lint``).
+
+The doctrine (DESIGN.md §Static analysis): every plan guarantee the repo
+claims -- comm volume, gathered-buffer peak, wire dtypes, quant-block
+alignment, EF threading -- is DECLARED on the plan
+(``ShardingPlan.invariants``) and PROVED here against the abstract-eval
+trace, before anything compiles or runs.  Tests call into this package
+instead of re-implementing jaxpr walkers.
+"""
+from .jaxpr import (BufferTrace, CollectiveEvent, CommTrace, count_full_f32,
+                    extract_buffers, extract_comm, has_full_f32,
+                    intermediate_avals, iter_eqns, scan_carry_avals,
+                    trace_train_step)
+from .verify import (VerificationError, VerificationReport, Violation,
+                     verify_plan_static, verify_runtime, verify_trace)
+
+__all__ = [
+    "BufferTrace", "CollectiveEvent", "CommTrace", "count_full_f32",
+    "extract_buffers", "extract_comm", "has_full_f32",
+    "intermediate_avals", "iter_eqns", "scan_carry_avals",
+    "trace_train_step", "VerificationError", "VerificationReport",
+    "Violation", "verify_plan_static", "verify_runtime", "verify_trace",
+]

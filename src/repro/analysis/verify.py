@@ -1,0 +1,547 @@
+"""Plan verification: prove a ShardingPlan's declared invariants against
+the traced program before a step ever runs.
+
+The plan *declares* (``GroupPlanEntry.invariants`` /
+``ShardingPlan.invariants``) and this module *checks* -- two layers:
+
+  * ``verify_plan_static(plan)`` -- checks that need no trace: schedule
+    dtype resolution, ring-chunk / quant-block alignment agreement, and
+    pricing-profile freshness.  Runs anywhere (no mesh, no devices).
+  * ``verify_runtime(runtime)`` -- abstract-evals one train step under
+    the runtime's plan (``repro.analysis.jaxpr.trace_train_step``; no
+    compilation, no device buffers) and checks the traced collectives
+    and buffers against every declared invariant: wire legs present,
+    byte totals fit the plan's ``gather_wire_mb``/``reduce_wire_mb``
+    predictions, wire dtypes legal for the resolved codec, ring chunks
+    land on the declared snap, gathered-buffer peak within the scan
+    structure's slot bound, no full-fp32 dequant intermediates on q8
+    paths, and EF residual leaves genuinely computed by the backward.
+
+Failures are structured ``Violation``s (group, invariant,
+expected-vs-found, jaxpr location), collected into a
+``VerificationReport``; callers decide whether to raise
+(``report.raise_if_failed()``) or render (``report.summary()``).
+DESIGN.md §Static analysis has the invariant catalog.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+
+# --------------------------------------------------------------------------- #
+# report structure
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    """One failed invariant: which group, which declared invariant, what
+    the plan promised vs what the trace (or static check) found, and --
+    when a jaxpr equation is implicated -- where."""
+
+    group: str
+    invariant: str
+    expected: str
+    found: str
+    where: str = ""
+    severity: str = "error"  # "error" | "warning"
+
+    def __str__(self) -> str:
+        loc = f" at {self.where}" if self.where else ""
+        return (f"[{self.severity}] group={self.group} "
+                f"invariant={self.invariant}: expected {self.expected}; "
+                f"found {self.found}{loc}")
+
+
+@dataclasses.dataclass(frozen=True)
+class VerificationReport:
+    """All violations plus the list of ``group:invariant`` labels that
+    were actually checked (an invariant that never ran is not a pass)."""
+
+    violations: tuple[Violation, ...]
+    checked: tuple[str, ...]
+
+    @property
+    def errors(self) -> tuple[Violation, ...]:
+        return tuple(v for v in self.violations if v.severity == "error")
+
+    @property
+    def warnings(self) -> tuple[Violation, ...]:
+        return tuple(v for v in self.violations if v.severity == "warning")
+
+    @property
+    def ok(self) -> bool:
+        return not self.errors
+
+    def summary(self) -> str:
+        head = (f"plan verification: {len(self.checked)} invariants "
+                f"checked, {len(self.errors)} violations, "
+                f"{len(self.warnings)} warnings")
+        lines = [head] + [f"  {v}" for v in self.violations]
+        return "\n".join(lines)
+
+    def raise_if_failed(self) -> "VerificationReport":
+        if not self.ok:
+            raise VerificationError(self)
+        return self
+
+    def merged(self, other: "VerificationReport") -> "VerificationReport":
+        return VerificationReport(self.violations + other.violations,
+                                  self.checked + other.checked)
+
+
+class VerificationError(RuntimeError):
+    """Raised by ``raise_if_failed``; carries the full report."""
+
+    def __init__(self, report: VerificationReport):
+        self.report = report
+        super().__init__(report.summary())
+
+
+class _Collector:
+    def __init__(self):
+        self.violations: list[Violation] = []
+        self.checked: list[str] = []
+
+    def check(self, group: str, invariant: str) -> None:
+        self.checked.append(f"{group}:{invariant}")
+
+    def fail(self, group: str, invariant: str, expected: str, found: str,
+             where: str = "", severity: str = "error") -> None:
+        self.violations.append(Violation(group, invariant, expected, found,
+                                         where, severity))
+
+    def report(self) -> VerificationReport:
+        return VerificationReport(tuple(self.violations),
+                                  tuple(self.checked))
+
+
+# --------------------------------------------------------------------------- #
+# static (trace-free) checks
+# --------------------------------------------------------------------------- #
+def verify_plan_static(plan, *, profile_path=None) -> VerificationReport:
+    """Check everything provable from the plan alone: per-group schedule
+    dtype resolution (``validate_for``), ring-chunk/quant-block snap
+    agreement, and -- when ``profile_path`` is given or ``BENCH_comm.json``
+    exists -- that an auto plan's recorded pricing-profile hash still
+    matches the profile on disk (mismatch is a *warning*: the plan still
+    runs, but its pricing provenance is stale)."""
+    import jax.numpy as jnp
+
+    col = _Collector()
+    cd = jnp.dtype(plan.compute_dtype)
+    for name, entry in plan.groups.items():
+        col.check(name, "schedule_valid")
+        try:
+            entry.schedule().validate_for(cd)
+        except ValueError as e:
+            col.fail(name, "schedule_valid", "schedule resolves for "
+                     f"compute={cd.name}", str(e))
+    for inv in plan.invariants():
+        if inv["name"] == "ring_chunk":
+            col.check(inv["group"], "ring_chunk")
+            if inv["snapped"] != inv["wire"]:
+                col.fail(
+                    inv["group"], "ring_chunk",
+                    f"declared ring_chunk_elems={inv['declared']} snapping "
+                    f"to a {inv['unit']}-aligned chunk of {inv['snapped']}",
+                    f"wire path snaps to {inv['wire']} "
+                    f"({inv['wire'] % inv['unit']} elems past a quant-block "
+                    f"boundary: blocks would straddle ring messages)")
+        elif inv["name"] == "profile_fresh":
+            _check_profile_fresh(col, inv, profile_path)
+    return col.report()
+
+
+def _check_profile_fresh(col: _Collector, inv: dict, profile_path) -> None:
+    import os
+
+    from ..core.profile import load_profile
+
+    path = profile_path or "BENCH_comm.json"
+    if not os.path.exists(path):
+        return  # nothing on disk to compare against
+    col.check("*", "profile_fresh")
+    try:
+        prof = load_profile(path)
+    except Exception as e:  # malformed profile: report, don't crash
+        col.fail("*", "profile_fresh", f"loadable profile at {path}",
+                 f"{type(e).__name__}: {e}", severity="warning")
+        return
+    if prof.content_hash() != inv["hash"]:
+        col.fail(
+            "*", "profile_fresh",
+            f"plan priced with profile {inv['profile']}@{inv['hash']}",
+            f"profile on disk ({path}) now hashes "
+            f"{prof.content_hash()} -- pricing is stale, re-plan to "
+            f"re-price", severity="warning")
+
+
+# --------------------------------------------------------------------------- #
+# trace-backed checks
+# --------------------------------------------------------------------------- #
+def _axes_of(entry) -> frozenset:
+    return frozenset(entry.fsdp_axes)
+
+
+def _event_matches_group(ev, entry, legs, rdtypes) -> bool:
+    """Attribute a collective event to a plan group by signature:
+    the event runs over the group's FSDP axes (ppermute rings carry the
+    manual ring axis name, so for them only sizes can be compared) and
+    its payload is one of the group's wire legs (full leg for one-shot
+    collectives, a divisor chunk for ring hops)."""
+    shard = entry.plan.shard_size
+    total = entry.plan.total
+    if ev.kind in ("all_gather",):
+        return (_axes_of(entry) == frozenset(ev.axes)
+                and any(ev.elems == e for _, e in legs))
+    if ev.kind in ("psum_scatter", "reduce_scatter"):
+        return (_axes_of(entry) == frozenset(ev.axes)
+                and ev.dtype in rdtypes and ev.elems == total)
+    if ev.kind == "ppermute":
+        # manual rings run over a collapsed axis name; match by world size
+        # and divisor-of-leg chunking instead
+        if ev.axis_size != entry.fsdp_world:
+            return False
+        for d, e in legs:
+            if ev.dtype == d and e % max(ev.elems, 1) == 0:
+                return True
+        for d in rdtypes:
+            # ring_acc / q8 routes chunk the shard (divisors); the
+            # order-exact route concatenates un-reduced chunks, so hop i
+            # carries i x chunk (multiples of the shard chunk)
+            if ev.dtype == d and (shard % max(ev.elems, 1) == 0
+                                  or ev.elems % max(shard, 1) == 0):
+                return True
+        return False
+    return False
+
+
+def _byte_fit(observed: float, unit_g: float, unit_r: float,
+              a_max: int, b_max: int) -> tuple[int, int, float]:
+    """Best integer (a, b) with observed ~= a*unit_g + b*unit_r; returns
+    (a, b, relative error).  a/b are per-layer copy counts (forward,
+    remat re-gathers, prefetch overlap legs), so small integers."""
+    best = (0, 0, 1.0 if observed else 0.0)
+    for a in range(a_max + 1):
+        rem = observed - a * unit_g
+        if unit_r > 0:
+            b = max(0, min(b_max, int(round(rem / unit_r))))
+        else:
+            b = 0
+        got = a * unit_g + b * unit_r
+        err = abs(observed - got) / max(observed, 1.0)
+        if err < best[2]:
+            best = (a, b, err)
+    return best
+
+
+def verify_trace(plan, comm, buffers, out_shapes=None, *,
+                 rtol: float = 0.05) -> VerificationReport:
+    """Check a plan's declared invariants against an extracted
+    ``CommTrace`` + ``BufferTrace`` (and, for EF threading, the traced
+    step's output shape tree).  Pure function of the traces -- callers
+    that already hold a jaxpr (tests) use this directly;
+    ``verify_runtime`` wraps tracing + this + the static pass."""
+    import jax.numpy as jnp
+
+    col = _Collector()
+    cd = jnp.dtype(plan.compute_dtype)
+    invs = plan.invariants()
+    by_group: dict[str, list[dict]] = {}
+    for inv in invs:
+        by_group.setdefault(inv["group"], []).append(inv)
+
+    for name, entry in plan.groups.items():
+        declared = {i["name"]: i for i in by_group.get(name, ())}
+        if "comm_bytes" in declared:
+            _check_comm(col, entry, declared["comm_bytes"],
+                        declared.get("ring_chunk"), comm, rtol)
+        if "wire_dtype" in declared:
+            _check_wire_dtype(col, entry, declared["wire_dtype"],
+                              declared["comm_bytes"], comm)
+        if "no_f32_dequant" in declared:
+            _check_no_f32_dequant(col, entry, declared["no_f32_dequant"],
+                                  buffers)
+        if "ef_threading" in declared:
+            _check_ef_threading(col, entry, out_shapes)
+
+    for inv in by_group.get("*", ()):
+        if inv["name"] == "gathered_peak":
+            _check_gathered_peak(col, inv, cd, buffers)
+    return col.report()
+
+
+def _check_comm(col, entry, inv, ring_inv, comm, rtol) -> None:
+    """comm_missing + comm_bytes: every declared wire leg must appear in
+    the trace with the right collective kind, and the total traced wire
+    bytes attributable to the group must fit an integer number of
+    plan-predicted copies.  Traced per-device bytes carry the (m-1)/m
+    ring/bandwidth discount the plan accounting deliberately leaves out,
+    so the per-copy unit is scaled here."""
+    name = entry.name
+    m = entry.fsdp_world
+    legs = tuple((d, int(e)) for d, e in inv["gather_legs"])
+    rdtypes = tuple(inv["reduce_dtypes"])
+    mine = [e for e in comm.events
+            if _event_matches_group(e, entry, legs, rdtypes)]
+
+    col.check(name, "comm_missing")
+    ring_gather = ring_inv is not None and entry.schedule().gather_mode == "ring"
+    gather_kinds = ("ppermute",) if ring_gather else ("all_gather",)
+    for d, e in legs:
+        hit = [ev for ev in mine if ev.kind in gather_kinds
+               and ev.dtype == d
+               and (e % max(ev.elems, 1) == 0 if ring_gather
+                    else ev.elems == e)]
+        if not hit:
+            near = sorted({(ev.kind, ev.dtype, ev.elems) for ev in mine})
+            col.fail(name, "comm_missing",
+                     f"gather leg {d}[{e}] via {gather_kinds[0]} "
+                     f"(codec {entry.policy.store})",
+                     f"no matching collective; group-attributed events: "
+                     f"{near or 'none'}")
+    reduce_kinds = (("ppermute",) if inv["reduce_route"] == "ring"
+                    else ("psum_scatter", "reduce_scatter"))
+    rhit = [ev for ev in mine if ev.kind in reduce_kinds
+            and ev.dtype in rdtypes]
+    if not rhit:
+        near = sorted({(ev.kind, ev.dtype, ev.elems) for ev in mine})
+        col.fail(name, "comm_missing",
+                 f"reduce route {inv['reduce_route']} in {rdtypes}",
+                 f"no matching collective; group-attributed events: "
+                 f"{near or 'none'}")
+
+    col.check(name, "comm_bytes")
+    observed = sum(e.wire_bytes * e.trips for e in mine)
+    n = entry.n_layers or 1
+    disc = (m - 1) / m if m > 1 else 0.0
+    unit_g = inv["gather_mb_per_copy"] * 1e6 * disc
+    unit_r = inv["reduce_mb_per_copy"] * 1e6 * disc
+    # a = per-layer gather copies x layers (fwd + remat re-gathers +
+    # prefetch overlap); b = reduce copies x layers
+    a, b, err = _byte_fit(observed, unit_g, unit_r,
+                          a_max=4 * n + 8, b_max=2 * n + 4)
+    if err > rtol:
+        col.fail(name, "comm_bytes",
+                 f"traced wire bytes = a*{unit_g / 1e6:.4f}MB + "
+                 f"b*{unit_r / 1e6:.4f}MB (integer copies of the plan's "
+                 f"per-copy predictions)",
+                 f"{observed / 1e6:.4f}MB; best fit a={a} b={b} off by "
+                 f"{100 * err:.1f}% (> {100 * rtol:.0f}% tolerance)")
+
+    if ring_inv is not None:
+        _check_ring_chunk_trace(col, entry, ring_inv, mine, legs)
+
+
+def _check_ring_chunk_trace(col, entry, inv, mine, legs) -> None:
+    """Traced ring hops must land on the declared snap: int8 code chunks
+    stay quant-block aligned, and (for ring gathers) the primary code/wire
+    leg actually moves in chunks of the declared snapped size."""
+    name, unit = entry.name, inv["unit"]
+    col.check(name, "ring_chunk")
+    code_dtype, code_elems = legs[0]
+    hops = [e for e in mine if e.kind == "ppermute" and e.dtype == code_dtype
+            and code_elems % max(e.elems, 1) == 0]
+    misaligned = sorted({e.elems for e in hops if e.elems % unit})
+    if misaligned:
+        col.fail(name, "ring_chunk",
+                 f"every {code_dtype} ring hop a multiple of the quant "
+                 f"block ({unit})",
+                 f"hop chunks {misaligned} straddle block boundaries",
+                 where=next(e.path for e in hops if e.elems % unit))
+    if (entry.schedule().gather_mode == "ring" and hops
+            and not any(e.elems == inv["snapped"] for e in hops)):
+        col.fail(name, "ring_chunk",
+                 f"gather ring hops of the snapped chunk size "
+                 f"{inv['snapped']} (declared {inv['declared']})",
+                 f"observed hop sizes {sorted({e.elems for e in hops})}")
+
+
+def _check_wire_dtype(col, entry, inv, comm_inv, comm) -> None:
+    """Any collective whose payload is shaped like this group's shard /
+    gathered buffer and runs over its axes must ship a dtype the resolved
+    codec allows -- the check that catches a plan promising q8 while the
+    trace ships bf16 (or the reverse)."""
+    name = entry.name
+    col.check(name, "wire_dtype")
+    legal = set(inv["legal"])
+    shard, total = entry.plan.shard_size, entry.plan.total
+    for ev in comm.events:
+        if ev.kind == "ppermute":
+            if ev.axis_size != entry.fsdp_world:
+                continue
+            sized = (shard % max(ev.elems, 1) == 0
+                     or ev.elems % max(shard, 1) == 0)
+        else:
+            if frozenset(ev.axes) != _axes_of(entry):
+                continue
+            sized = ev.elems in (shard, total)
+        # scales legs ride beside code legs at shard/block granularity
+        sized = sized or (entry.store.quantized
+                          and (shard // entry.quant_block)
+                          % max(ev.elems, 1) == 0)
+        if sized and ev.dtype not in legal:
+            col.fail(name, "wire_dtype",
+                     f"wire dtypes within {sorted(legal)} (resolved codec "
+                     f"{entry.policy.store}/"
+                     f"{entry.policy.reduce_wire or 'cast'})",
+                     f"{ev.kind} ships {ev.dtype}[{ev.elems}]",
+                     where=ev.path)
+
+
+def _check_no_f32_dequant(col, entry, inv, buffers) -> None:
+    """q8 gather paths must dequantize straight into the compute dtype:
+    no full-gathered-size int8->float32 convert outside pallas bodies
+    (the fused-kernel regression, generalized).  The EF residual and
+    optimizer masters are legitimately fp32 at related sizes, so the
+    check keys on the *conversion*, not on any fp32 aval existing.  The
+    one legitimate non-pallas int8->f32 decode is the LOG-space moment
+    decode of the 8-bit Adam family (a reference passthrough by design,
+    ops.quantize_log docstring) -- recognizable because its value flows
+    into an ``exp`` within a few steps; linear-space decodes run as
+    pallas kernels and never appear here."""
+    from .jaxpr import _as_jaxpr, _sub_jaxprs
+
+    name = entry.name
+    col.check(name, "no_f32_dequant")
+    gathered = inv["gathered_elems"]
+    if buffers._jaxpr is None:
+        return
+
+    def scan_scope(jx, path):
+        consumers: dict[int, list] = {}
+        for eqn in jx.eqns:
+            for v in eqn.invars:
+                consumers.setdefault(id(v), []).append(eqn)
+
+        def feeds_exp(var, depth=4) -> bool:
+            if depth <= 0:
+                return False
+            for c in consumers.get(id(var), ()):
+                if c.primitive.name == "exp":
+                    return True
+                if any(feeds_exp(o, depth - 1) for o in c.outvars):
+                    return True
+            return False
+
+        for i, eqn in enumerate(jx.eqns):
+            pname = eqn.primitive.name
+            here = f"{path}/{pname}[{i}]"
+            if pname == "convert_element_type":
+                src = getattr(eqn.invars[0], "aval", None)
+                dst = getattr(eqn.outvars[0], "aval", None)
+                if (src is not None and dst is not None
+                        and hasattr(src, "shape")
+                        and str(src.dtype) == "int8"
+                        and str(dst.dtype) == "float32"):
+                    n = int(np.prod(dst.shape)) if dst.shape else 1
+                    if n >= gathered and not feeds_exp(eqn.outvars[0]):
+                        col.fail(
+                            name, "no_f32_dequant",
+                            "q8 dequant fused into the compute dtype (no "
+                            "full-size int8->float32 materialization)",
+                            f"convert_element_type int8->float32 over {n} "
+                            f"elems (gathered size {gathered})", where=here)
+            if "pallas" in pname:
+                continue
+            for sub in _sub_jaxprs(eqn):
+                scan_scope(sub, here)
+
+    scan_scope(_as_jaxpr(buffers._jaxpr), "")
+
+
+def _check_ef_threading(col, entry, out_shapes) -> None:
+    """The EF residual must come back from the step as a genuinely
+    computed fp32 leaf -- present in the new-params tree under the
+    group's ``reduce_ef`` key, fp32, sized m shard-lengths.  (The jaxpr
+    side -- that the leaf is an equation output, not a passthrough of the
+    input -- is implied: ``trace_train_step`` feeds params as
+    ShapeDtypeStructs, so an un-updated residual could only appear via
+    identity, which the size/dtype check plus the reduce-leg
+    comm_missing check above pins.)"""
+    from ..core.store import EF_KEY
+
+    name = entry.name
+    col.check(name, "ef_threading")
+    if out_shapes is None:
+        return
+    new_params = out_shapes[0]
+    g = new_params.get(name) if isinstance(new_params, dict) else None
+    leaf = g.get(EF_KEY) if isinstance(g, dict) else None
+    # the step's output tree is GLOBAL (outside shard_map): the residual's
+    # last dim is ef_m x the buffer's, i.e. m x gathered-total per layer
+    # (each device's slice is one full gathered buffer)
+    expect = entry.fsdp_world * entry.plan.total
+    if leaf is None:
+        col.fail(name, "ef_threading",
+                 f"'{EF_KEY}' residual leaf in the step's new-params tree",
+                 f"group output keys: "
+                 f"{sorted(g) if isinstance(g, dict) else type(g).__name__}")
+        return
+    n = int(np.prod(leaf.shape)) if leaf.shape else 1
+    # layered groups carry one residual per layer: elems per layer
+    per_layer = n // (entry.n_layers or 1) if entry.n_layers else n
+    if str(leaf.dtype) != "float32" or per_layer != expect:
+        col.fail(name, "ef_threading",
+                 f"fp32 residual of m x gathered-total = {expect} "
+                 f"elems/layer",
+                 f"{leaf.dtype}[{'x'.join(map(str, leaf.shape))}]")
+
+
+def _check_gathered_peak(col, inv, cd, buffers) -> None:
+    """Two teeth: (1) no scan carry holds a full gathered layer buffer in
+    the compute dtype (a carry means backward retains one buffer per
+    layer -- the prefetch-retention regression); (2) the per-scope
+    liveness peak of gathered-size compute-dtype buffers stays within the
+    scan structure's slot bound.  Backward scopes hold a cotangent twin
+    per live gathered buffer, so the liveness bound is 2x the forward
+    slot count."""
+    slots = inv["max_slots"]
+    for gname, meta in inv["groups"].items():
+        elems = meta["elems"]
+        col.check(gname, "gathered_peak")
+        carried = [s for s, d in buffers.scan_carries
+                   if d == str(cd) and int(np.prod(s)) == elems]
+        if carried:
+            col.fail(gname, "gathered_peak",
+                     f"no {cd.name}[{elems}] gathered buffer in any scan "
+                     f"carry (reshard-after-forward frees layers)",
+                     f"scan carries hold {carried}")
+        peak = buffers.live_peak(elems=elems, dtype=cd)
+        # 2x: every live gathered buffer has a cotangent twin in backward
+        # scopes; +1: a reshape/unpack view of the buffer is a distinct
+        # jaxpr value of the same size class even though XLA aliases it
+        bound = 2 * slots + 1
+        if peak > bound:
+            col.fail(gname, "gathered_peak",
+                     f"<= {bound} simultaneously-live {cd.name}[{elems}] "
+                     f"buffers (2x {slots} slots for backward cotangents, "
+                     f"+1 aliasing view)",
+                     f"liveness peak {peak}")
+
+
+# --------------------------------------------------------------------------- #
+# entry point
+# --------------------------------------------------------------------------- #
+def verify_runtime(runtime, optimizer=None, *, batch=None, plan=None,
+                   profile_path=None,
+                   rtol: float = 0.05) -> VerificationReport:
+    """Trace one train step of ``runtime`` (pure abstract eval) and check
+    every invariant its plan declares -- static checks included.  ``plan``
+    defaults to the runtime's own resolved plan; passing a different plan
+    verifies THAT plan's promises against THIS runtime's program (how the
+    broken-plan CLI demo works)."""
+    from .jaxpr import extract_buffers, extract_comm, trace_train_step
+
+    plan = plan if plan is not None else runtime.plan
+    report = verify_plan_static(plan, profile_path=profile_path)
+    closed, out_shapes = trace_train_step(runtime, optimizer, batch=batch)
+    axis_sizes = {str(a): int(s) for a, s in
+                  zip(runtime.mesh.axis_names,
+                      runtime.mesh.devices.shape)}
+    comm = extract_comm(closed, axis_sizes)
+    buffers = extract_buffers(closed)
+    return report.merged(verify_trace(plan, comm, buffers, out_shapes,
+                                      rtol=rtol))

@@ -181,3 +181,12 @@ def tree_unflatten(treedef, leaves):
     if hasattr(jax, "tree"):
         return jax.tree.unflatten(treedef, leaves)
     return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def tree_map_with_path(f: Callable, tree: Any, *rest: Any):
+    """The ``*_with_path`` family migrated from ``jax.tree_util`` to
+    ``jax.tree`` across 0.4.x; prefer the new home."""
+    t = getattr(jax, "tree", None)
+    if t is not None and hasattr(t, "map_with_path"):
+        return t.map_with_path(f, tree, *rest)
+    return jax.tree_util.tree_map_with_path(f, tree, *rest)

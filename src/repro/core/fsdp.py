@@ -98,7 +98,7 @@ class FSDPRuntime:
                  scan_unroll: int = 1, schedule: CommSchedule | None = None,
                  group_schedules: Mapping[str, Any] | None = None,
                  policies=None, plan: ShardingPlan | None = None,
-                 cost_model=None):
+                 cost_model=None, verify: bool = False):
         self.model = model
         self.cfg = model.cfg
         self.mesh = mesh
@@ -175,6 +175,15 @@ class FSDPRuntime:
         self.batch_size_divisor = int(
             np.prod([axis_sizes[a] for a in self.batch_axes])
         )
+
+        if verify:
+            # prove the plan's declared invariants against the traced step
+            # (repro.analysis: abstract eval only, nothing compiles) before
+            # handing the runtime out; raises VerificationError with the
+            # full Violation report on failure
+            from ..analysis import verify_runtime
+
+            verify_runtime(self).raise_if_failed()
 
     # ------------------------------------------------------------------ #
     def sched_for(self, name: str) -> CommSchedule:

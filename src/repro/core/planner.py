@@ -217,7 +217,10 @@ def plan_group(
         raise ValueError("planner: no feasible shard size found")
 
     placements = _place_all(tensors, best_S, align)
-    assert placements is not None
+    if placements is None:
+        raise RuntimeError(
+            f"planner: shard size {best_S} was judged feasible but "
+            f"placement failed -- feasibility probe and placer disagree")
     plan = GroupPlan(tuple(placements), shard_size=best_S, num_shards=m)
     plan.validate()
     # stash stats for benchmarks without widening the dataclass API

@@ -379,6 +379,77 @@ class GroupPlanEntry:
         local = self.plan.shard_size if self.fsdp_axes else self.plan.total
         return int(local * per_elem * (self.n_layers or 1))
 
+    def invariants(self, compute_dtype) -> tuple[dict, ...]:
+        """The group's declared invariant set: what ``repro.analysis``
+        proves about the traced step for this policy (DESIGN.md §Static
+        analysis has the catalog).  Each entry is a plain dict (name +
+        parameters + bitwise-vs-allclose class) so the declaration is
+        serializable beside the plan.  New comm/store variants MUST extend
+        this -- a policy combination with no declared invariants is
+        unverifiable by doctrine."""
+        import jax.numpy as jnp
+
+        from .wire import _snap_chunk
+
+        sched = self.schedule()
+        cd = jnp.dtype(compute_dtype)
+        inv: list[dict] = []
+        if self.fsdp_axes and self.fsdp_world > 1:
+            shard = self.plan.shard_size
+            # wire legs of one gather copy: (dtype name, per-device elems)
+            if self.store.quantized:
+                legs = (("int8", shard),
+                        ("float32", shard // self.quant_block))
+            else:
+                legs = ((str(sched.wire_dtype(cd)), shard),)
+            rcodec = sched.reduce_codec(cd, self.quant_block)
+            ring_gather = sched.gather_mode == "ring"
+            ring_reduce = (sched.reduce_mode == "ring_acc"
+                           or (sched.reduce_mode == "match"
+                               and (rcodec.quantized or ring_gather)))
+            if rcodec.quantized:
+                rdtypes = ("int8", "float32")
+            else:
+                rdtypes = (str(sched.accum_dtype(cd)),)
+            inv.append({
+                "name": "comm_bytes", "group": self.name,
+                "class": "exact",
+                "gather_legs": legs,
+                "reduce_route": ("ring" if ring_reduce else "psum_scatter"),
+                "reduce_dtypes": rdtypes,
+                "gather_mb_per_copy": self.gather_wire_bytes(cd) / 1e6
+                / (self.n_layers or 1),
+                "reduce_mb_per_copy": self.reduce_wire_bytes(cd) / 1e6
+                / (self.n_layers or 1),
+            })
+            inv.append({
+                "name": "wire_dtype", "group": self.name, "class": "exact",
+                "legal": sorted({d for d, _ in legs} | set(rdtypes)),
+            })
+            if ring_gather or ring_reduce:
+                unit = self.quant_block if self.store.quantized else 1
+                declared = sched.ring_chunk_elems
+                # "snapped" is the block-aligned snap the declaration
+                # promises; "wire" is the unit-1 snap the gather data path
+                # performs.  They must agree, or the declared chunk makes
+                # quant blocks straddle ring messages (the misalignment
+                # class the q8 align guarantee exists to prevent).
+                inv.append({
+                    "name": "ring_chunk", "group": self.name,
+                    "class": "exact", "declared": declared,
+                    "snapped": _snap_chunk(shard, declared, unit),
+                    "wire": _snap_chunk(shard, declared),
+                    "unit": unit,
+                })
+        if self.store.quantized and cd != jnp.dtype(jnp.float32):
+            inv.append({"name": "no_f32_dequant", "group": self.name,
+                        "class": "exact",
+                        "gathered_elems": int(self.plan.total)})
+        if sched.ef_enabled:
+            inv.append({"name": "ef_threading", "group": self.name,
+                        "class": "exact"})
+        return tuple(inv)
+
 
 @dataclasses.dataclass(frozen=True)
 class ShardingPlan:
@@ -434,6 +505,40 @@ class ShardingPlan:
     def reduce_wire_bytes(self) -> int:
         return sum(e.reduce_wire_bytes(self.compute_dtype)
                    for e in self.groups.values())
+
+    def invariants(self) -> tuple[dict, ...]:
+        """The plan's full declared invariant set: every group's
+        declarations (``GroupPlanEntry.invariants``) plus the plan-level
+        entries only the whole plan can state -- the gathered-buffer peak
+        the scan structure bounds, and the pricing-profile freshness
+        warning for auto plans.  ``repro.analysis.verify`` consumes this;
+        the declaration is data, the checkers live there."""
+        inv: list[dict] = []
+        for e in self.groups.values():
+            inv.extend(e.invariants(self.compute_dtype))
+        sched = self.base_schedule()
+        layered = {n: e for n, e in self.groups.items()
+                   if e.n_layers and e.fsdp_axes and e.fsdp_world > 1}
+        if layered:
+            n = max(e.n_layers for e in layered.values())
+            if not sched.reshard_after_forward:
+                slots = n
+            else:
+                lp = sched.plan_layers(n, remat=True)
+                main_slots = (2 if lp.prefetch else 1) if lp.main else 0
+                slots = main_slots + int(lp.split_last)
+            inv.append({
+                "name": "gathered_peak", "group": "*", "class": "exact",
+                "max_slots": slots,
+                "groups": {name: {"elems": int(e.plan.total)}
+                           for name, e in layered.items()},
+            })
+        if self.profile_name != "none":
+            inv.append({
+                "name": "profile_fresh", "group": "*", "class": "warn",
+                "profile": self.profile_name, "hash": self.profile_hash,
+            })
+        return tuple(inv)
 
     # ---- inspection ------------------------------------------------------ #
     def describe(self) -> str:

@@ -327,7 +327,11 @@ class CommSchedule:
     def reduce_codec(self, compute_dtype, block: int = 1024) -> WireCodec:
         """The gradient reduce-scatter's WireCodec: ``reduce_wire`` when
         set (``block`` sizes the q8 payload -- the group's quant block),
-        else a cast codec of the legacy accum dtype, bit for bit."""
+        else a cast codec of the legacy accum dtype, bit for bit.
+
+        PARITY: BITWISE -- codec resolution only; routes carry their own
+        class (see core.wire's tagged primitives).
+        """
         if self.reduce_wire is not None:
             return WireCodec(self.reduce_wire, block)
         return WireCodec(fmt_of_dtype(self.accum_dtype(compute_dtype)))

@@ -325,7 +325,10 @@ class ParamStore:
         updated value returns through the grad tree; ``defer_ef`` selects
         the deferred backward (microbatch accumulation: no collective per
         microbatch, the runtime reduce-scatters the accumulated cotangent
-        once at the boundary -- see core.wire)."""
+        once at the boundary -- see core.wire).
+
+        PARITY: BITWISE -- dispatch over the tagged core.wire primitives.
+        """
         cd = jnp.dtype(compute_dtype)
         rcodec = sched.reduce_codec(cd, self.block)
         rc = sched.ring_chunk_elems
@@ -365,7 +368,10 @@ class ParamStore:
         ``{"codes", "scales"}`` of the full flat buffer, pure data
         movement.  The serve path uses this to keep eligible weights in
         int8 end to end (``DBuffer.unpack_quant`` -> ``ops.q8_matmul``);
-        training's ``gather`` decodes it through the fused kernel."""
+        training's ``gather`` decodes it through the fused kernel.
+
+        PARITY: BITWISE -- pure data movement of the encoded payload.
+        """
         if not self.quantized:
             raise ValueError(
                 f"gather_payload on a {self.fmt!r} store (quantized only)")

@@ -212,7 +212,10 @@ def _ring_all_gather(x, axes: tuple[str, ...], axis_sizes: tuple[int, ...],
 
     ``ring_chunk`` (elements, i.e. leading-axis rows) splits each ring
     message into equal sub-chunks pipelined as independent rings -- still
-    pure data movement, so still bitwise, at any chunk size."""
+    pure data movement, so still bitwise, at any chunk size.
+
+    PARITY: BITWISE -- pure data movement vs lax.all_gather(tiled).
+    """
     n = math.prod(axis_sizes)
     if n == 1:
         return x
@@ -264,7 +267,10 @@ def _ring_reduce_scatter(ct, axes: tuple[str, ...],
 
     ``ring_chunk`` splits each destination chunk into equal sub-chunks run
     as independent sub-rings; every element keeps the same contributions in
-    the same accumulation order, so chunking stays bitwise here."""
+    the same accumulation order, so chunking stays bitwise here.
+
+    PARITY: BITWISE -- order-exact vs lax.psum_scatter.
+    """
     n = math.prod(axis_sizes)
     if n == 1:
         return ct
@@ -314,7 +320,10 @@ def _ring_acc_reduce_scatter(ct, axes: tuple[str, ...],
     ``ring_chunk`` splits each destination chunk into independent
     sub-rings; each element's additions keep the same ring order and
     dtype, so chunking is bitwise-neutral *within* this mode (the mode
-    itself stays in the allclose class vs match)."""
+    itself stays in the allclose class vs match).
+
+    PARITY: ALLCLOSE -- ring-order accumulation vs match mode.
+    """
     n = math.prod(axis_sizes)
     if n == 1:
         return ct
@@ -382,7 +391,10 @@ def _q8_route_reduce_scatter(payload, block: int, axes: tuple[str, ...],
     XLA collective that dequant-accumulates, so both modes route manually).
     Returns the fp32 shard.  ``ring_chunk`` (block-aligned sub-chunks, see
     ``_snap_chunk``) keeps per-element contributions and device-order
-    accumulation unchanged -- bitwise-neutral."""
+    accumulation unchanged -- bitwise-neutral.
+
+    PARITY: BITWISE -- match-mode q8: routed un-reduced, absolute-order accumulate.
+    """
     codes, scales = payload["codes"], payload["scales"]
     n = math.prod(axis_sizes)
     if n == 1:
@@ -425,7 +437,10 @@ def _q8_ring_acc_reduce_scatter(payload, block: int, axes: tuple[str, ...],
     match-mode rule.  Returns the fp32 shard.  ``ring_chunk`` sub-rings
     keep each element's dequant/add/requant sequence unchanged (per-block
     quantization never crosses the block-aligned sub-chunk boundary), so
-    chunking is bitwise-neutral within this mode."""
+    chunking is bitwise-neutral within this mode.
+
+    PARITY: ALLCLOSE -- in-flight re-quantized partials vs the match-mode q8 route.
+    """
     codes, scales = payload["codes"], payload["scales"]
     n = math.prod(axis_sizes)
     if n == 1:
@@ -459,7 +474,10 @@ def dtype_reduce_scatter(g, axes, axis_sizes, mode, reduce_mode,
     """The cast-codec gradient reduce-scatter: accumulate-in-flight ring
     when reduce_mode says so, else the gather mode's bitwise-exact match
     (psum_scatter for xla, the order-exact ring for ring).  ``ring_chunk``
-    applies only to the ring routes; the xla collective ignores it."""
+    applies only to the ring routes; the xla collective ignores it.
+
+    PARITY: BITWISE -- route selection only; each route carries its own class.
+    """
     if not axes:
         return g
     if reduce_mode == "ring_acc":
@@ -483,7 +501,10 @@ def codec_reduce_scatter(ct, ef, codec: WireCodec, axes, axis_sizes, mode,
     per ``reduce_mode``, and hand back the fresh quantization error as the
     new residual.  With no FSDP axes (m == 1) the encode/decode round-trip
     still runs, so a replicated/1-device run exercises the exact wire
-    numerics of the sharded one."""
+    numerics of the sharded one.
+
+    PARITY: BITWISE -- vs the jitted unfused encode+EF composition.
+    """
     if not codec.quantized:
         if ef is not None:
             raise ValueError(
@@ -518,7 +539,10 @@ def payload_all_gather(x, axes, axis_sizes, mode, ring_chunk=None):
     (int8 codes, per-block scales): gathered in ``x``'s own dtype, no VJP --
     gradients for a quantized store flow through ``codec_grad_proxy``
     instead (straight-through to the master shard).  ``ring_chunk``
-    applies only to the ring route (per-payload message size)."""
+    applies only to the ring route (per-payload message size).
+
+    PARITY: BITWISE -- data movement in the codec's wire payload.
+    """
     x = lax.stop_gradient(x)
     if not axes:
         return x
@@ -555,6 +579,8 @@ def codec_gather(x, axes, axis_sizes, gather_codec: WireCodec,
     ``ring_chunk`` (``CommSchedule.ring_chunk_elems``) bounds the ring
     message size in both directions; ``None`` is the shard-sized legacy
     default and every value is bitwise-neutral within the mode pair.
+
+    PARITY: BITWISE -- decode after bitwise gather == gather of decode.
     """
     payload = gather_codec.encode(x)
     gathered = jax.tree.map(
@@ -594,7 +620,10 @@ def codec_gather_ef(x, ef, axes, axis_sizes, gather_codec: WireCodec,
     forward ignores it; the backward adds it to the cotangent before
     encoding and returns the fresh quantization error as ``ef``'s
     cotangent, so ``jax.grad`` over ``(x, ef)`` yields
-    ``(grad_shard, new_residual)``."""
+    ``(grad_shard, new_residual)``.
+
+    PARITY: BITWISE -- codec_gather plus EF residual pass-through.
+    """
     del ef
     return codec_gather(x, axes, axis_sizes, gather_codec, reduce_codec,
                         out_dtype, param_dtype, mode, reduce_mode,
@@ -636,7 +665,10 @@ def codec_grad_proxy(x, axes, axis_sizes, reduce_codec: WireCodec, out_dtype,
     from the codes while the gradient flows here.  backward: the standard
     ZeRO-3 reduce-scatter of the cotangent through ``reduce_codec`` to
     ``param_dtype`` (the master shard's dtype), exactly as
-    ``codec_gather``'s backward."""
+    ``codec_gather``'s backward.
+
+    PARITY: BITWISE -- backward route == declared reduce route.
+    """
     return _proxy_zeros(x, axes, axis_sizes, out_dtype)
 
 
@@ -663,7 +695,10 @@ def codec_grad_proxy_ef(x, ef, axes, axis_sizes, reduce_codec: WireCodec,
                         ring_chunk=None):
     """``codec_grad_proxy`` with the error-feedback residual threaded
     through, for quantized stores whose *reduce* wire is also quantized
-    (q8 payload both directions -- the full QSDP configuration)."""
+    (q8 payload both directions -- the full QSDP configuration).
+
+    PARITY: BITWISE -- EF residual cotangent threading.
+    """
     del ef
     return _proxy_zeros(x, axes, axis_sizes, out_dtype)
 
@@ -714,7 +749,10 @@ def codec_gather_defer_ef(x, ef, axes, axis_sizes, gather_codec: WireCodec,
     """``codec_gather_ef`` for microbatch accumulation: the backward defers
     the quantized reduce-scatter, returning (zero shard, ct.f32) so the
     accumulated cotangent can be encoded once at the boundary (where
-    ``core.fsdp`` applies ``ring_chunk`` to the one real reduce)."""
+    ``core.fsdp`` applies ``ring_chunk`` to the one real reduce).
+
+    PARITY: BITWISE -- deferred-EF gather: no encode in microbatch backward.
+    """
     del ef
     return codec_gather(x, axes, axis_sizes, gather_codec, reduce_codec,
                         out_dtype, param_dtype, mode, reduce_mode,
@@ -743,7 +781,10 @@ def codec_grad_proxy_defer_ef(x, ef, axes, axis_sizes,
                               reduce_codec: WireCodec, out_dtype,
                               param_dtype, mode, reduce_mode,
                               ring_chunk=None):
-    """``codec_grad_proxy_ef`` with the deferred (microbatch) backward."""
+    """``codec_grad_proxy_ef`` with the deferred (microbatch) backward.
+
+    PARITY: BITWISE -- raw-cotangent residual slot, boundary encode.
+    """
     del ef
     return _proxy_zeros(x, axes, axis_sizes, out_dtype)
 
@@ -772,7 +813,10 @@ def sharded_gather(x, axes, axis_sizes, wire_dtype, reduce_dtype, out_dtype,
     """The pre-codec primitive signature: cast-to-wire all-gather whose
     backward is a cast-to-reduce reduce-scatter.  Now a thin lowering onto
     ``codec_gather`` with cast codecs -- op-for-op identical, which is what
-    keeps every fp32/bf16 schedule bitwise-stable across the refactor."""
+    keeps every fp32/bf16 schedule bitwise-stable across the refactor.
+
+    PARITY: BITWISE -- dispatch over bitwise gather implementations.
+    """
     return codec_gather(
         x, axes, axis_sizes, WireCodec(fmt_of_dtype(wire_dtype)),
         WireCodec(fmt_of_dtype(reduce_dtype)), jnp.dtype(out_dtype),

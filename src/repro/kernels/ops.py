@@ -45,48 +45,84 @@ def _interpret() -> bool:
 
 
 def quantize(x, block: int = 1024):
+    """Blockwise absmax int8 encode (store create/rebuild, wire encode).
+
+    PARITY: BITWISE -- vs the jitted quant.blockwise reference.
+    """
     return _q(x, block=block, interpret=_interpret())
 
 
 def dequantize(codes, scales, block: int = 1024):
+    """Blockwise decode to fp32 (cold paths, 8-bit Adam moments).
+
+    PARITY: BITWISE -- vs the jitted quant.blockwise reference.
+    """
     return _deq(codes, scales, block=block, interpret=_interpret())
 
 
 def dequantize_into(codes, scales, block: int = 1024, *, out_dtype):
     """Gather-path fused decode: codes + scales -> out_dtype, no
-    intermediate full-size fp32 buffer."""
+    intermediate full-size fp32 buffer.
+
+    PARITY: BITWISE -- vs the jitted decode+cast composition.
+    """
     return _deq_into(codes, scales, block=block, out_dtype=out_dtype,
                      interpret=_interpret())
 
 
 def encode_ef(ct, ef, block: int = 1024):
     """Reduce-path fused encode + error feedback:
-    (codes, scales, new_ef) of ``comp = ct.f32 + ef``."""
+    (codes, scales, new_ef) of ``comp = ct.f32 + ef``.
+
+    PARITY: BITWISE -- vs the jitted unfused compensate+encode.
+    """
     return _encode_ef(ct, ef, block=block, interpret=_interpret())
 
 
 def q8_matmul(x, codes, scales, block: int = 1024, *, out_dtype=None):
-    """Serve-path int8 x int8 GEMM on gathered codes (ALLCLOSE class)."""
+    """Serve-path int8 x int8 GEMM on gathered codes: the weight scale
+    folds into the activation, which is row-quantized to int8.
+
+    PARITY: ALLCLOSE -- bounded new error vs the dense oracle (bitwise
+    only against its own jnp op-sequence twin).
+    """
     return _q8mm(x, codes, scales, block=block, out_dtype=out_dtype,
                  interpret=_interpret())
 
 
 def quantize_log(x, block: int = 1024):
     """Log-space blockwise quantize (8-bit Adam's v): reference on every
-    backend -- no standalone fused kernel (adam8bit_update fuses it)."""
+    backend -- no standalone fused kernel (adam8bit_update fuses it).
+
+    PARITY: BITWISE -- reference passthrough.
+    """
     return quantize_blockwise_log(x, block)
 
 
 def dequantize_log(codes, scales, block: int = 1024):
+    """Log-space blockwise decode; reference passthrough like
+    ``quantize_log``.
+
+    PARITY: BITWISE -- reference passthrough.
+    """
     return dequantize_blockwise_log(codes, scales, block)
 
 
 def adamw_update(w, g, m, v, mask, *, lr, b1, b2, eps, wd, c1, c2):
+    """Fused AdamW moment + weight update.
+
+    PARITY: BITWISE -- vs the jitted kernels/ref.py composition.
+    """
     return _adamw(w, g, m, v, mask, lr, b1, b2, eps, wd, c1, c2,
                   interpret=_interpret())
 
 
 def adam8bit_update(w, g, m8, v8, ms, vs, mask, *, lr, b1, b2, eps, wd,
                     c1, c2, block: int = 1024):
+    """Fused 8-bit Adam update (blockwise-quantized moments; the moment
+    (de)quant inside is the BITWISE-class blockwise codec).
+
+    PARITY: BITWISE -- vs the jitted kernels/ref.py composition.
+    """
     return _adam8(w, g, m8, v8, ms, vs, mask, lr, b1, b2, eps, wd, c1, c2,
                   block=block, interpret=_interpret())

@@ -111,7 +111,7 @@ def _optimizer_cost(runtime, cfg):
 def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
             planner: str = "ragged", quiet: bool = False,
             calibrate: bool = True, overrides: dict | None = None,
-            policies=None, cost_model=None):
+            policies=None, cost_model=None, verify: bool = False):
     from ..configs import build_model, get_config, supports_shape
     from ..configs.base import SHAPES
     from ..core.policy import make_plan
@@ -150,6 +150,16 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
     compiled, runtime = _compile(cfg, shape, mesh, planner,
                                  policies=policies)
     t_full = time.time() - t0
+    if verify:
+        # abstract-eval verification on the production mesh: prove the
+        # plan's declared comm/memory/dtype invariants against the traced
+        # step before trusting any cost numbers from it
+        from ..analysis import verify_runtime
+
+        vreport = verify_runtime(runtime)
+        if not quiet:
+            print(vreport.summary())
+        vreport.raise_if_failed()
     mem = compiled.memory_analysis()
     if not quiet:
         from ..compat import cost_analysis
@@ -279,6 +289,11 @@ def main():
                          "benchmarks.bench_comm); prices --policies auto "
                          "from the calibrated curves instead of the "
                          "builtin roofline constants")
+    ap.add_argument("--verify", action="store_true",
+                    help="prove the plan's declared comm/memory/dtype "
+                         "invariants against the traced step "
+                         "(repro.analysis) before reporting costs; abort "
+                         "on any violation")
     ap.add_argument("--no-calibrate", action="store_true")
     ap.add_argument("--optimized", action="store_true",
                     help="apply the beyond-paper §Perf winners "
@@ -325,7 +340,8 @@ def main():
             r = run_one(arch, shape, multi_pod=args.multi_pod,
                         planner=args.planner,
                         calibrate=not args.no_calibrate, overrides=ov,
-                        policies=args.policies, cost_model=cost_model)
+                        policies=args.policies, cost_model=cost_model,
+                        verify=args.verify)
             row = r.row()
         except Exception as e:
             traceback.print_exc()

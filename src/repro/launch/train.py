@@ -45,6 +45,11 @@ def main():
     ap.add_argument("--tp", type=int, default=0,
                     help="override the arch config's tensor-parallel degree "
                          "(requires --model >= the degree)")
+    ap.add_argument("--verify", action="store_true",
+                    help="statically verify the plan's declared comm/memory/"
+                         "dtype invariants against the traced step "
+                         "(repro.analysis) before running; abort on any "
+                         "violation")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=5)
     args = ap.parse_args()
@@ -85,6 +90,13 @@ def main():
                           policies=args.policies, cost_model=cost_model)
     print(runtime.plan.describe())
     optimizer = make_optimizer(cfg)
+    if args.verify:
+        from ..analysis import verify_runtime
+
+        report = verify_runtime(runtime, optimizer,
+                                profile_path=args.profile)
+        print(report.summary())
+        report.raise_if_failed()
 
     params = runtime.init_params(args.seed)
     opt_state = optimizer.init(runtime)

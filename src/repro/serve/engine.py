@@ -22,6 +22,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import compat
+
 
 @dataclasses.dataclass
 class Request:
@@ -72,8 +74,7 @@ class ServeEngine:
                 return leaf.at[tuple(idx)].set(-1)
             return leaf
 
-        self.cache = jax.tree_util.tree_map_with_path(
-            rst, self.cache, bdims)
+        self.cache = compat.tree_map_with_path(rst, self.cache, bdims)
 
     def _admit(self):
         for i, slot in enumerate(self.slots):

@@ -1,0 +1,17 @@
+"""Deliberately non-conforming file: the negative fixture the CI
+static-analysis job lints to prove a lint failure blocks the job.  It is
+NOT on the linter's default scan surface (tests/ is excluded) so the real
+tree stays green; the job (and tests/test_analysis.py) point the linter at
+this file explicitly and demand a nonzero exit.
+
+Expected findings: compat-only (versioned shard_map import + *_with_path
+attribute use) and bare-assert.
+"""
+from jax.experimental.shard_map import shard_map  # noqa: F401
+
+
+def scatter(tree, f):
+    import jax
+
+    assert tree is not None
+    return jax.tree_util.tree_map_with_path(f, tree)

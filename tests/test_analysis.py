@@ -1,0 +1,335 @@
+"""The static-analysis subsystem (repro.analysis): plan verifier +
+layering linter.
+
+  * linter rules unit-tested on synthetic trees (compat-only,
+    quant-blockwise, bare-assert, parity-tags incl. the DESIGN.md
+    cross-check), the real tree proven clean, and the deliberately-bad
+    fixture proven to FAIL -- the CI-blocking path without breaking src/.
+  * plan-side declarations: every policy combination declares its
+    invariant set; the static pass catches a ring chunk whose unit-1 wire
+    snap disagrees with the quant-block snap.
+  * stale-profile drift: an auto plan records its pricing profile's
+    content hash; mutating the profile on disk turns verify_plan_static
+    into a warning, re-pricing shows the drift in diff(), and describe()
+    carries the provenance.
+  * the 8-device subprocess drives the full verifier on real plans:
+    q8/ring passes, a tampered plan (bf16 promise vs q8 wire) names
+    group+invariant, FSDPRuntime(verify=True) gates construction, and the
+    EF-threading regression fires when a plan that declares error
+    feedback is verified against a step that computes none.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+from test_autotune import _measured_profile
+
+from repro.analysis.lint import LintError, run_lint
+from repro.analysis.lint import main as lint_main
+from repro.analysis.verify import verify_plan_static
+from repro.configs import build_model, get_config
+from repro.core.policy import CostModel, make_plan
+from repro.core.profile import CommSample
+from repro.core.schedule import CommSchedule
+from repro.core.wire import _snap_chunk
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+
+
+def _model(arch="qwen2.5-14b"):
+    return build_model(get_config(arch).reduced())
+
+
+# --------------------------------------------------------------------------- #
+# linter rules on synthetic trees
+# --------------------------------------------------------------------------- #
+
+def _lint_tree(tmp_path, files, select=None, paths=None):
+    for rel, text in files.items():
+        p = tmp_path / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(textwrap.dedent(text))
+    return run_lint(tmp_path, select=select, paths=paths)
+
+
+def _rules(errs):
+    return {e.rule for e in errs}
+
+
+def test_compat_only_flags_versioned_symbols(tmp_path):
+    errs = _lint_tree(tmp_path, {
+        "src/repro/core/x.py": """
+            from jax.experimental.shard_map import shard_map
+            import jax
+
+            def f(t, g):
+                return jax.tree_util.tree_map_with_path(g, t)
+        """,
+    }, select=["compat-only"])
+    assert len(errs) == 2 and _rules(errs) == {"compat-only"}
+    assert "repro.compat" in errs[0].msg
+
+
+def test_compat_only_exemptions(tmp_path):
+    # compat.py itself and pallas-in-kernels are the two legal homes
+    errs = _lint_tree(tmp_path, {
+        "src/repro/compat.py": """
+            from jax.experimental.shard_map import shard_map
+        """,
+        "src/repro/kernels/k.py": """
+            import jax.experimental.pallas as pl
+        """,
+        "src/repro/core/y.py": """
+            import jax.experimental.pallas as pl
+        """,
+    }, select=["compat-only"])
+    assert [e.path for e in errs] == ["src/repro/core/y.py"]
+
+
+def test_quant_blockwise_and_bare_assert(tmp_path):
+    errs = _lint_tree(tmp_path, {
+        "src/repro/core/hot.py": """
+            from ..quant.blockwise import quantize_blockwise
+
+            def f(x):
+                assert x is not None
+                return quantize_blockwise(x, 64)
+        """,
+        # quant/ and tests/ keep their oracle imports and asserts
+        "src/repro/quant/ref2.py": """
+            from .blockwise import quantize_blockwise
+        """,
+    }, select=["quant-blockwise", "bare-assert"])
+    assert [e.path for e in errs] == ["src/repro/core/hot.py"] * 2
+    assert _rules(errs) == {"quant-blockwise", "bare-assert"}
+
+
+def test_parity_tags_and_design_cross_check(tmp_path):
+    (tmp_path / "DESIGN.md").write_text(
+        "| `ops.foo` fused decode | BITWISE |\n")
+    errs = _lint_tree(tmp_path, {
+        "src/repro/kernels/ops.py": '''
+            def foo(x):
+                """Decode.
+
+                PARITY: ALLCLOSE -- disagrees with DESIGN.md on purpose.
+                """
+                return x
+
+            def bar(x):
+                """No tag at all."""
+                return x
+
+            def baz(x):
+                """Bad class.
+
+                PARITY: SORTA -- not a class.
+                """
+                return x
+
+            def _helper(x):
+                return x
+        ''',
+    }, select=["parity-tags"])
+    by_msg = sorted((e.rule, e.msg.split("'")[1]) for e in errs)
+    assert by_msg == [("parity-tags", "bar"), ("parity-tags", "baz"),
+                      ("parity-tags", "foo")]
+
+
+def test_unknown_rule_rejected(tmp_path):
+    with pytest.raises(ValueError, match="unknown lint rules"):
+        run_lint(tmp_path, select=["no-such-rule"])
+
+
+def test_repo_tree_is_lint_clean():
+    """The shipped tree passes every rule -- what the CI job enforces."""
+    assert run_lint(REPO_ROOT) == []
+
+
+def test_bad_fixture_blocks_ci():
+    """The negative path: a lint failure exits nonzero (blocking CI)
+    without any bad code living on the default scan surface."""
+    fixture = "tests/fixtures/lint_bad.py"
+    errs = run_lint(REPO_ROOT, paths=[fixture])
+    assert {"compat-only", "bare-assert"} <= _rules(errs)
+    assert all(isinstance(e, LintError) and e.path == fixture for e in errs)
+    assert lint_main([fixture, "--root", str(REPO_ROOT)]) == 1
+    assert lint_main(["--root", str(REPO_ROOT)]) == 0
+
+
+# --------------------------------------------------------------------------- #
+# plan-side declarations + the static (trace-free) pass
+# --------------------------------------------------------------------------- #
+
+Q8_RING = CommSchedule(param_store="q8_block", reduce_wire="q8_block",
+                       reduce_mode="ring_acc", gather_mode="ring",
+                       prefetch=True)
+
+
+def test_plan_declares_invariants():
+    plain = make_plan(_model(), {"data": 8})
+    names = {i["name"] for i in plain.invariants()}
+    assert {"comm_bytes", "wire_dtype", "gathered_peak"} <= names
+    assert "profile_fresh" not in names  # not an auto plan
+
+    q8 = make_plan(_model(), {"data": 8}, Q8_RING)
+    qnames = {i["name"] for i in q8.invariants()}
+    assert {"ring_chunk", "no_f32_dequant", "ef_threading"} <= qnames
+    # every declaration names its group and parity class
+    assert all(i.get("group") and i.get("class")
+               for i in q8.invariants())
+
+
+def test_static_pass_catches_misaligned_ring_chunk():
+    import dataclasses
+
+    plan = make_plan(_model(), {"data": 8}, Q8_RING)
+    assert verify_plan_static(plan).ok
+    gname = max(plan.groups, key=lambda n: plan.groups[n].plan.total)
+    e = plan.groups[gname]
+    shard, block = e.plan.shard_size, e.quant_block
+    # a declared chunk whose unit-1 wire snap lands off the block grid
+    bad_chunk = next((c for c in range(block + 1, 32 * block)
+                      if _snap_chunk(shard, c, block) != _snap_chunk(shard, c)),
+                     None)
+    assert bad_chunk is not None, (shard, block)
+    pol = dataclasses.replace(e.policy, ring_chunk_elems=bad_chunk)
+    bad = dataclasses.replace(
+        plan, groups={**dict(plan.groups),
+                      gname: dataclasses.replace(e, policy=pol)})
+    rep = verify_plan_static(bad)
+    assert not rep.ok
+    (v,) = [v for v in rep.errors if v.invariant == "ring_chunk"]
+    assert v.group == gname and str(bad_chunk) in v.expected
+    assert "straddle" in v.found
+
+
+def test_stale_profile_drift(tmp_path):
+    """Satellite: an auto plan's pricing provenance is checkable.  The
+    plan records name@content-hash (visible in describe()); a mutated
+    profile on disk makes verify_plan_static warn (not fail); re-pricing
+    against the mutated profile surfaces the drift in diff()."""
+    prof_a = _measured_profile(name="drift-test")
+    plan = make_plan(_model("gemma2-2b"), {"data": 8}, "auto",
+                     cost_model=CostModel.from_profile(prof_a))
+    assert plan.profile_name == "drift-test"
+    assert plan.profile_hash == prof_a.content_hash()
+    assert plan.profile_hash in plan.describe()
+    assert any(i["name"] == "profile_fresh" for i in plan.invariants())
+
+    # fresh profile on disk: the freshness check runs and stays quiet
+    path_a = tmp_path / "fresh.json"
+    prof_a.save(path_a)
+    rep = verify_plan_static(plan, profile_path=str(path_a))
+    assert rep.ok and not rep.warnings
+    assert "*:profile_fresh" in rep.checked
+
+    # mutated profile (an extra calibration sample changes the content
+    # hash): stale pricing is a warning -- the plan still runs
+    prof_b = _measured_profile(name="drift-test", sweep=(
+        CommSample("gather", "bf16", "ring", 1 << 20, 16384,
+                   (1 << 20) * 0.3e-3),))
+    assert prof_b.content_hash() != prof_a.content_hash()
+    path_b = tmp_path / "mutated.json"
+    prof_b.save(path_b)
+    rep = verify_plan_static(plan, profile_path=str(path_b))
+    assert rep.ok
+    (w,) = rep.warnings
+    assert w.invariant == "profile_fresh" and "stale" in w.found
+    assert plan.profile_hash in w.expected
+
+    # re-pricing against the mutated profile: the drift is a first-class
+    # plan difference, not a silent re-decision
+    replan = make_plan(_model("gemma2-2b"), {"data": 8}, "auto",
+                       cost_model=CostModel.from_profile(prof_b))
+    assert replan.profile_hash == prof_b.content_hash()
+    assert any("profile.hash" in line for line in plan.diff(replan))
+
+
+# --------------------------------------------------------------------------- #
+# 8-device: the full verifier on real traced plans (subprocess -- jax
+# fixes the device count at first init)
+# --------------------------------------------------------------------------- #
+
+_VERIFY_DRIVER = textwrap.dedent("""
+    import os, json, dataclasses
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax.numpy as jnp
+    from repro.analysis import (extract_buffers, extract_comm,
+                                trace_train_step, verify_runtime,
+                                verify_trace)
+    from repro.configs import get_config, build_model
+    from repro.core.fsdp import FSDPRuntime
+    from repro.core.schedule import VARIANTS
+    from repro.launch.mesh import make_local_mesh
+
+    mesh = make_local_mesh(8, 1)
+    model = build_model(get_config("qwen2.5-14b").reduced())
+    out = {}
+
+    q8 = dataclasses.replace(
+        VARIANTS["overlap_all"], param_store="q8_block",
+        reduce_wire="q8_block", reduce_dtype=None, reduce_mode="ring_acc",
+        gather_mode="ring")
+    rt = FSDPRuntime(model, mesh, schedule=q8, compute_dtype=jnp.bfloat16)
+    rep = verify_runtime(rt)
+    out["q8_ok"] = rep.ok
+    out["q8_violations"] = [str(v) for v in rep.errors]
+    out["q8_checked"] = sorted({c.split(":")[1] for c in rep.checked})
+
+    # the runtime constructor gate is the same machinery
+    FSDPRuntime(model, mesh, compute_dtype=jnp.bfloat16, verify=True)
+    out["ctor_verify"] = True
+
+    # tampered plan: promises a bf16 cast wire, the runtime ships q8
+    gname = max(rt.plan.groups, key=lambda n: rt.plan.groups[n].plan.total)
+    e = rt.plan.groups[gname]
+    pol = dataclasses.replace(e.policy, store="bf16", reduce_wire=None)
+    bad = dataclasses.replace(
+        rt.plan, groups={**dict(rt.plan.groups),
+                         gname: dataclasses.replace(e, policy=pol)})
+    brep = verify_runtime(rt, plan=bad)
+    out["tampered_ok"] = brep.ok
+    out["tampered"] = sorted({(v.group, v.invariant) for v in brep.errors})
+
+    # EF-threading regression, via the analyzer: verify the EF-declaring
+    # q8 plan against a step that computes NO residual
+    rt_noef = FSDPRuntime(model, mesh, compute_dtype=jnp.bfloat16)
+    closed, shapes = trace_train_step(rt_noef)
+    axis_sizes = {str(a): int(s) for a, s in zip(
+        rt_noef.mesh.axis_names, rt_noef.mesh.devices.shape)}
+    vrep = verify_trace(rt.plan, extract_comm(closed, axis_sizes),
+                        extract_buffers(closed), shapes)
+    out["ef_flagged"] = sorted({v.group for v in vrep.errors
+                                if v.invariant == "ef_threading"})
+    print(json.dumps(out))
+""")
+
+
+@pytest.mark.slow
+def test_verifier_8dev_subprocess():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", _VERIFY_DRIVER],
+                         capture_output=True, text=True, env=env,
+                         timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    data = json.loads(out.stdout.strip().splitlines()[-1])
+    # the real q8/ring plan proves out, with the full invariant surface
+    assert data["q8_ok"], data["q8_violations"]
+    assert {"comm_bytes", "comm_missing", "wire_dtype", "ring_chunk",
+            "no_f32_dequant", "ef_threading",
+            "gathered_peak"} <= set(data["q8_checked"])
+    assert data["ctor_verify"]
+    # the tampered plan fails, naming group + invariant
+    assert not data["tampered_ok"]
+    tampered = {tuple(t) for t in data["tampered"]}
+    assert any(inv == "comm_missing" for _, inv in tampered)
+    assert any(inv == "wire_dtype" for _, inv in tampered)
+    # EF declared but never computed -> exactly the ef_threading invariant
+    assert data["ef_flagged"], "missing EF residual went undetected"

@@ -36,6 +36,7 @@ import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, st
 
+from repro.analysis import count_full_f32, has_full_f32
 from repro.kernels import ops, ref
 from repro.kernels.blockwise_quant import dequantize_into as deq_into_raw
 from repro.kernels.blockwise_quant import quantize as quantize_raw
@@ -61,34 +62,9 @@ def special_blocks(nblocks, block, seed, dtype=jnp.float32):
 
 # ---------------------------------------------------------------------------
 # jaxpr regression: no full-size fp32 materialization on the gather path
+# (the walker lives in repro.analysis -- the same machinery the plan
+# verifier's no_f32_dequant invariant runs on full train steps)
 # ---------------------------------------------------------------------------
-
-def _intermediate_avals(jaxpr, acc):
-    """Every equation-output aval, recursing through call primitives but
-    NOT into pallas_call bodies -- the kernel body is the fusion itself
-    (tile-resident on TPU), so values inside it are not XLA buffers."""
-    for eqn in jaxpr.eqns:
-        if "pallas" in eqn.primitive.name:
-            continue
-        for p in jax.tree.leaves(eqn.params, is_leaf=lambda x: isinstance(
-                x, (jax.core.ClosedJaxpr, jax.core.Jaxpr))):
-            if isinstance(p, jax.core.ClosedJaxpr):
-                _intermediate_avals(p.jaxpr, acc)
-            elif isinstance(p, jax.core.Jaxpr):
-                _intermediate_avals(p, acc)
-        for v in eqn.outvars:
-            av = getattr(v, "aval", None)
-            if av is not None and hasattr(av, "shape"):
-                acc.append(av)
-    return acc
-
-
-def _has_full_f32(fn, *args, n=None):
-    jaxpr = jax.make_jaxpr(fn)(*args)
-    avals = _intermediate_avals(jaxpr.jaxpr, [])
-    return any(av.dtype == jnp.float32 and int(np.prod(av.shape)) >= n
-               for av in avals)
-
 
 def test_dequantize_into_no_f32_materialization():
     n, block = 8 * 1024, 1024
@@ -97,13 +73,13 @@ def test_dequantize_into_no_f32_materialization():
 
     fused = lambda c, s: ops.dequantize_into(c, s, block,
                                              out_dtype=jnp.bfloat16)
-    assert not _has_full_f32(fused, codes, scales, n=n), (
+    assert not has_full_f32(fused, codes, scales, n=n), (
         "fused gather decode materialized a full-size fp32 buffer")
 
     # the unfused composition DOES materialize one -- proves the walker
     # actually sees full-size f32 intermediates when they exist
     unfused = lambda c, s: ref.dequantize_into_ref(c, s, block, jnp.bfloat16)
-    assert _has_full_f32(unfused, codes, scales, n=n)
+    assert has_full_f32(unfused, codes, scales, n=n)
 
 
 def test_encode_ef_no_extra_f32_buffers():
@@ -116,16 +92,10 @@ def test_encode_ef_no_extra_f32_buffers():
     ct = jnp.zeros((n,), jnp.bfloat16)
     ef = jnp.zeros((n,), jnp.float32)
 
-    def count_full_f32(fn):
-        avals = _intermediate_avals(jax.make_jaxpr(fn)(ct, ef).jaxpr, [])
-        return sum(1 for av in avals
-                   if av.dtype == jnp.float32
-                   and int(np.prod(av.shape)) >= n)
-
     fused = lambda c, e: ops.encode_ef(c, e, block)
     unfused = lambda c, e: ref.encode_ef_ref(c, e, block)
-    assert count_full_f32(fused) <= 3
-    assert count_full_f32(unfused) >= 10
+    assert count_full_f32(fused, ct, ef, n=n) <= 3
+    assert count_full_f32(unfused, ct, ef, n=n) >= 10
 
 
 # ---------------------------------------------------------------------------

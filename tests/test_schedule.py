@@ -234,31 +234,7 @@ def test_gathered_peak_bytes_accounting():
 # regression: prefetch must not store gathered layer buffers in scan carries
 # --------------------------------------------------------------------------- #
 
-def _iter_subjaxprs(val):
-    vals = val if isinstance(val, (list, tuple)) else [val]
-    for v in vals:
-        if hasattr(v, "jaxpr"):   # ClosedJaxpr
-            yield v.jaxpr
-        elif hasattr(v, "eqns"):  # Jaxpr
-            yield v
-
-
-def _scan_carry_avals(closed_jaxpr):
-    found = []
-
-    def walk(jaxpr):
-        for eqn in jaxpr.eqns:
-            if eqn.primitive.name == "scan":
-                nc = eqn.params["num_consts"]
-                nk = eqn.params["num_carry"]
-                for v in eqn.invars[nc:nc + nk]:
-                    found.append((tuple(v.aval.shape), str(v.aval.dtype)))
-            for val in eqn.params.values():
-                for sub in _iter_subjaxprs(val):
-                    walk(sub)
-
-    walk(closed_jaxpr.jaxpr)
-    return found
+from repro.analysis import iter_eqns, scan_carry_avals
 
 
 def _step_jaxpr(schedule, n_layers=5):
@@ -279,8 +255,8 @@ def test_prefetch_scan_carry_has_no_gathered_buffers():
     its carry signature is a subset of the sequential schedule's."""
     rt, pre = _step_jaxpr(VARIANTS["overlap_all"])
     _, ref = _step_jaxpr(CommSchedule.default())
-    pre_carries = set(_scan_carry_avals(pre))
-    ref_carries = set(_scan_carry_avals(ref))
+    pre_carries = set(scan_carry_avals(pre))
+    ref_carries = set(scan_carry_avals(ref))
     assert pre_carries <= ref_carries, (
         "prefetch added scan carry entries", pre_carries - ref_carries)
     # and explicitly: no carry anywhere is a gathered layer flat buffer
@@ -294,20 +270,14 @@ def _pair_barrier_eqns(closed_jaxpr, gathered_avals):
     """optimization_barrier eqns whose operands include >= 2 gathered layer
     buffers -- the explicit two-slot issue-order pin in the pair scan."""
     found = []
-
-    def walk(jaxpr):
-        for eqn in jaxpr.eqns:
-            if eqn.primitive.name == "optimization_barrier":
-                hits = sum(
-                    (tuple(v.aval.shape), str(v.aval.dtype)) in gathered_avals
-                    for v in eqn.invars)
-                if hits >= 2:
-                    found.append(eqn)
-            for val in eqn.params.values():
-                for sub in _iter_subjaxprs(val):
-                    walk(sub)
-
-    walk(closed_jaxpr.jaxpr)
+    for eqn, _, _ in iter_eqns(closed_jaxpr):
+        if eqn.primitive.name != "optimization_barrier":
+            continue
+        hits = sum(
+            (tuple(v.aval.shape), str(v.aval.dtype)) in gathered_avals
+            for v in eqn.invars)
+        if hits >= 2:
+            found.append(eqn)
     return found
 
 

@@ -1,62 +1,14 @@
 #!/usr/bin/env python
-"""CI guard: hot paths must go through the kernels dispatch layer.
-
-``repro.quant.blockwise`` is the REFERENCE implementation and parity
-oracle; the execution engine for every quant hot path is
-``repro.kernels.ops`` (Pallas on TPU, interpret elsewhere).  This check
-fails if anything outside the allowed homes imports quant.blockwise
-directly:
-
-  * src/repro/kernels/   -- the dispatch layer and its oracles (ref.py)
-    are BUILT on the reference; that is the point.
-  * src/repro/quant/     -- the module itself.
-  * tests/               -- parity suites compare against the reference.
-
-Everything else (core/, models/, optim/, serve/, launch/, benchmarks/)
-must import ``repro.kernels.ops`` (or ``repro.kernels.ref`` when a
-benchmark deliberately models the unfused ablation).
-"""
-from __future__ import annotations
-
-import re
+"""Back-compat shim: the quant.blockwise import guard now lives in the
+lint framework (``repro.analysis.lint``, rule ``quant-blockwise``) --
+run ``python tools/lint.py`` for the full rule set."""
+import pathlib
 import sys
-from pathlib import Path
 
-ROOT = Path(__file__).resolve().parent.parent
+_ROOT = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(_ROOT / "src"))
 
-# an import of the reference module, any spelling:
-#   from repro.quant.blockwise import ... / import repro.quant.blockwise
-#   from ..quant.blockwise import ...    / from .blockwise import ...
-PAT = re.compile(
-    r"^\s*(?:from\s+(?:repro\.|\.+)?quant\.blockwise\s+import"
-    r"|import\s+repro\.quant\.blockwise"
-    r"|from\s+(?:repro\.|\.+)?quant\s+import)",
-    re.MULTILINE)
-
-ALLOWED = ("src/repro/kernels/", "src/repro/quant/", "tests/")
-SCAN = ("src", "benchmarks", "tools")
-
-
-def main() -> int:
-    bad = []
-    for top in SCAN:
-        for py in sorted((ROOT / top).rglob("*.py")):
-            rel = py.relative_to(ROOT).as_posix()
-            if rel == "tools/check_quant_imports.py":
-                continue
-            if any(rel.startswith(a) for a in ALLOWED):
-                continue
-            for m in PAT.finditer(py.read_text()):
-                line = py.read_text()[:m.start()].count("\n") + 1
-                bad.append(f"{rel}:{line}: {m.group(0).strip()}")
-    if bad:
-        print("hot paths must import repro.kernels.ops, not quant.blockwise:")
-        for b in bad:
-            print("  " + b)
-        return 1
-    print(f"ok: no direct quant.blockwise imports outside {ALLOWED}")
-    return 0
-
+from repro.analysis.lint import main  # noqa: E402
 
 if __name__ == "__main__":
-    sys.exit(main())
+    sys.exit(main(["--select", "quant-blockwise", "--root", str(_ROOT)]))

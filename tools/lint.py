@@ -1,0 +1,19 @@
+#!/usr/bin/env python
+"""Single lint entry point: runs ``repro.analysis.lint`` over the repo.
+
+Bootstraps ``src/`` onto sys.path so CI jobs (and humans) can run it as
+plain ``python tools/lint.py`` with no PYTHONPATH setup.  Rule docs and
+the registry live in ``src/repro/analysis/lint.py``; select a subset
+with ``--select RULE`` (repeatable).
+"""
+import pathlib
+import sys
+
+_ROOT = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(_ROOT / "src"))
+
+from repro.analysis.lint import main  # noqa: E402
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:] + ["--root", str(_ROOT)]
+                  if "--root" not in sys.argv else sys.argv[1:]))
