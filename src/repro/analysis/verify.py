@@ -392,21 +392,25 @@ def _check_wire_dtype(col, entry, inv, comm_inv, comm) -> None:
 
 
 def _check_no_f32_dequant(col, entry, inv, buffers) -> None:
-    """q8 gather paths must dequantize straight into the compute dtype:
-    no full-gathered-size int8->float32 convert outside pallas bodies
-    (the fused-kernel regression, generalized).  The EF residual and
-    optimizer masters are legitimately fp32 at related sizes, so the
-    check keys on the *conversion*, not on any fp32 aval existing.  The
-    one legitimate non-pallas int8->f32 decode is the LOG-space moment
-    decode of the 8-bit Adam family (a reference passthrough by design,
-    ops.quantize_log docstring) -- recognizable because its value flows
-    into an ``exp`` within a few steps; linear-space decodes run as
-    pallas kernels and never appear here."""
+    """Quantized gather paths must decode straight into the compute
+    dtype: no full-gathered-size code->float32 convert outside pallas
+    bodies (the fused-kernel regression, generalized).  The invariant's
+    ``src_dtype`` names the code dtype -- "int8" for q8_block, the
+    float8 dtype for fp8 stores (whose decode is ONE cast to the compute
+    dtype; a full f32 dequant would betray an unfused two-step decode).
+    The EF residual and optimizer masters are legitimately fp32 at
+    related sizes, so the check keys on the *conversion*, not on any
+    fp32 aval existing.  The one legitimate non-pallas int8->f32 decode
+    is the LOG-space moment decode of the 8-bit Adam family (a reference
+    passthrough by design, ops.quantize_log docstring) -- recognizable
+    because its value flows into an ``exp`` within a few steps;
+    linear-space decodes run as pallas kernels and never appear here."""
     from .jaxpr import _as_jaxpr, _sub_jaxprs
 
     name = entry.name
     col.check(name, "no_f32_dequant")
     gathered = inv["gathered_elems"]
+    src_dtype = inv.get("src_dtype", "int8")
     if buffers._jaxpr is None:
         return
 
@@ -434,16 +438,18 @@ def _check_no_f32_dequant(col, entry, inv, buffers) -> None:
                 dst = getattr(eqn.outvars[0], "aval", None)
                 if (src is not None and dst is not None
                         and hasattr(src, "shape")
-                        and str(src.dtype) == "int8"
+                        and str(src.dtype) == src_dtype
                         and str(dst.dtype) == "float32"):
                     n = int(np.prod(dst.shape)) if dst.shape else 1
                     if n >= gathered and not feeds_exp(eqn.outvars[0]):
                         col.fail(
                             name, "no_f32_dequant",
-                            "q8 dequant fused into the compute dtype (no "
-                            "full-size int8->float32 materialization)",
-                            f"convert_element_type int8->float32 over {n} "
-                            f"elems (gathered size {gathered})", where=here)
+                            "quantized decode fused into the compute dtype "
+                            f"(no full-size {src_dtype}->float32 "
+                            "materialization)",
+                            f"convert_element_type {src_dtype}->float32 "
+                            f"over {n} elems (gathered size {gathered})",
+                            where=here)
             if "pallas" in pname:
                 continue
             for sub in _sub_jaxprs(eqn):

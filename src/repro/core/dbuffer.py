@@ -114,10 +114,11 @@ class DBuffer:
         """Unpack a gathered q8_block wire payload (``{"codes",
         "scales"}``) per tensor WITHOUT a whole-buffer dequantize.
 
-        Eligible 2-D tensors (``ops.quant_eligible``: whole number of
-        quant blocks, separable scale layout) come out as ``QuantTensor``
-        views of their codes + scales slices -- the dense weight never
-        materializes, ``layers.dense`` routes them to the int8 GEMM
+        Eligible 2-D tensors (``ops.quant_eligible``: separable scale
+        layout; a trailing partial block is fine -- the ceil-count scales
+        fold per row) come out as ``QuantTensor`` views of their codes +
+        scales slices -- the dense weight never materializes,
+        ``layers.dense`` routes them to the int8 GEMM
         (``ops.q8_matmul``).  Everything else gets a per-tensor fused
         dequant into the compute dtype.  Per-tensor payload slicing relies
         on the planner's align guarantee (tensor starts at quant-block
@@ -142,7 +143,11 @@ class DBuffer:
                               (off // block + nb,))
             if ops.quant_eligible(p.spec.shape, block):
                 k, n = p.spec.shape
-                out[p.spec.name] = ops.QuantTensor(c.reshape(k, n), s, block)
+                # overhang case: nb*block > size; the codes view keeps
+                # exactly the tensor's elements, the ceil-count scales
+                # stay (q8_matmul folds them per row, truncated at k)
+                out[p.spec.name] = ops.QuantTensor(
+                    jax.lax.slice(c, (0,), (size,)).reshape(k, n), s, block)
             else:
                 t = ops.dequantize_into(c, s, block, out_dtype=compute_dtype)
                 out[p.spec.name] = jax.lax.slice(

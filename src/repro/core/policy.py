@@ -73,6 +73,7 @@ from .profile import CommProfile, builtin_profile, load_profile
 from .ragged import LANE, GroupPlan, Placement, TensorSpec, compose_granularity
 from .schedule import CommSchedule, resolve_group_schedules
 from .store import ParamStore
+from .wire import STORE_FORMATS
 
 # structural tags a PolicyRule can select on (see group_tag)
 TAGS = ("layers", "experts", "globals")
@@ -372,10 +373,13 @@ class GroupPlanEntry:
         any quantized payload + the reduce-wire EF residual, which is m
         shard-lengths of fp32 per device), across the layer stack."""
         s = self.store
-        per_elem = (
-            s.storage_dtype.itemsize if not s.quantized
-            else 1 + 4 + 4.0 / s.block)  # codes + fp32 master + scales
-        per_elem += 4.0 * s.ef_m         # fp32 EF residual (m shards)
+        if s.quantized:
+            per_elem = 1 + 4 + 4.0 / s.block  # codes + fp32 master + scales
+        elif s.fp8:
+            per_elem = 1 + 4                  # fp8 codes + fp32 master
+        else:
+            per_elem = s.storage_dtype.itemsize
+        per_elem += 4.0 * s.ef_m              # fp32 EF residual (m shards)
         local = self.plan.shard_size if self.fsdp_axes else self.plan.total
         return int(local * per_elem * (self.n_layers or 1))
 
@@ -400,6 +404,8 @@ class GroupPlanEntry:
             if self.store.quantized:
                 legs = (("int8", shard),
                         ("float32", shard // self.quant_block))
+            elif self.store.fp8:
+                legs = ((str(self.store.fp8_dtype), shard),)
             else:
                 legs = ((str(sched.wire_dtype(cd)), shard),)
             rcodec = sched.reduce_codec(cd, self.quant_block)
@@ -443,7 +449,15 @@ class GroupPlanEntry:
                 })
         if self.store.quantized and cd != jnp.dtype(jnp.float32):
             inv.append({"name": "no_f32_dequant", "group": self.name,
+                        "class": "exact", "src_dtype": "int8",
+                        "gathered_elems": int(self.plan.total)})
+        if self.store.fp8 and cd != jnp.dtype(jnp.float32):
+            # the fused gather decode is a single fp8 -> compute cast;
+            # a full-size fp8 -> f32 convert would betray an unfused
+            # dequant-then-downcast path
+            inv.append({"name": "no_f32_dequant", "group": self.name,
                         "class": "exact",
+                        "src_dtype": str(self.store.fp8_dtype),
                         "gathered_elems": int(self.plan.total)})
         if sched.ef_enabled:
             inv.append({"name": "ef_threading", "group": self.name,
@@ -757,9 +771,19 @@ class CostModel:
     The format with the smallest predicted time wins, ties broken toward
     the earlier (more exact) candidate -- so an m=1 mesh keeps fp32
     everywhere and a bandwidth-bound layer stack at scale takes the
-    ~4x-cheaper q8_block wire.  Tiny *unstacked* groups (< ``replicate_
-    bytes`` of master weights) are kept replicated: their per-step gather
-    latency outweighs the memory the shard would save.
+    ~4x-cheaper q8_block wire.  fp8 store formats (``FP8_CANDIDATES``,
+    guarded on ``compat.float8_dtypes``) are scored after the base
+    candidates and only when the profile carries a *measured* fp8 gather
+    curve for the mode under consideration: the builtin roofline's
+    apparent fp8-over-q8 win is just the per-block scales overhead
+    (4/quant_block B/elem, up to ~10% at block 32), not evidence that
+    this backend's fused fp8 cast is actually faster, so analytic-only
+    pricing never nominates fp8 and every historical builtin decision
+    is stable.  A measured fp8 curve must still beat the incumbent by
+    more than the near-tie band (``FP8_NEAR_TIE_RTOL``) to displace it.
+    Tiny *unstacked* groups (< ``replicate_bytes`` of master weights) are
+    kept replicated: their per-step gather latency outweighs the memory
+    the shard would save.
     """
 
     ici_bw: float
@@ -772,6 +796,18 @@ class CostModel:
 
     # store formats in preference order (ties break toward the left)
     CANDIDATES = ("fp32", "bf16", "q8_block")
+    # fp8 store candidates (guarded: empty where the installed JAX lacks
+    # float8).  Scored after CANDIDATES, and only when the profile has a
+    # *measured* fp8 gather curve for the mode: the analytic fp8-vs-q8
+    # gap is pure scales overhead (4/quant_block B/elem -- ~0.4% at
+    # block 1024 but ~10% at block 32), which says nothing about whether
+    # this backend's fused fp8 cast actually wins, so the builtin
+    # roofline never nominates fp8 and historical auto decisions hold.
+    # A measured curve must additionally beat the incumbent by more than
+    # FP8_NEAR_TIE_RTOL to flip a group to fp8.
+    FP8_CANDIDATES = tuple(f for f in STORE_FORMATS
+                           if f.startswith("fp8_"))
+    FP8_NEAR_TIE_RTOL = 0.02
     # gather modes in preference order (xla wins ties)
     GATHER_MODES = ("xla", "ring")
 
@@ -856,6 +892,10 @@ class CostModel:
                 deq = elems_per_layer * (
                     1 + 4.0 / quant_block + compute_itemsize)
                 t += gathers * n_layers * deq / self.hbm_bw
+            if not self.profile.end_to_end and fmt.startswith("fp8_"):
+                # scale-free decode: fp8 codes in, compute-dtype out
+                deq = elems_per_layer * (1 + compute_itemsize)
+                t += gathers * n_layers * deq / self.hbm_bw
             return t
         store = ParamStore(fmt, quant_block)
         wire_dtype = np.dtype(np.float32 if compute_itemsize == 4
@@ -868,6 +908,10 @@ class CostModel:
             # local dequant traffic: codes+scales in, compute-dtype out
             deq = elems_per_layer * (1 + 4.0 / quant_block + compute_itemsize)
             t += gathers * n_layers * deq / self.hbm_bw
+        elif store.fp8:
+            # the decode cast: fp8 codes in, compute-dtype out (no scales)
+            deq = elems_per_layer * (1 + compute_itemsize)
+            t += gathers * n_layers * deq / self.hbm_bw
         return t
 
     def choose_store(self, elems_per_layer: int, n_layers: int, m: int,
@@ -879,6 +923,15 @@ class CostModel:
                                  quant_block, compute_itemsize, reshard,
                                  mode)
             if best_t is None or t < best_t:
+                best, best_t = fmt, t
+        for fmt in self.FP8_CANDIDATES:
+            if self._measured_time("gather", fmt, mode,
+                                   elems_per_layer, m) is None:
+                continue  # fp8 competes only on measured evidence
+            t = self.gather_time(fmt, elems_per_layer, n_layers, m,
+                                 quant_block, compute_itemsize, reshard,
+                                 mode)
+            if t < best_t * (1.0 - self.FP8_NEAR_TIE_RTOL):
                 best, best_t = fmt, t
         return best
 
@@ -897,6 +950,16 @@ class CostModel:
                                      quant_block, compute_itemsize, reshard,
                                      mode)
                 if best_t is None or t < best_t:
+                    best, best_t = (fmt, mode), t
+        for fmt in self.FP8_CANDIDATES:
+            for mode in self.GATHER_MODES:
+                if self._measured_time("gather", fmt, mode,
+                                       elems_per_layer, m) is None:
+                    continue  # fp8 competes only on measured evidence
+                t = self.gather_time(fmt, elems_per_layer, n_layers, m,
+                                     quant_block, compute_itemsize, reshard,
+                                     mode)
+                if t < best_t * (1.0 - self.FP8_NEAR_TIE_RTOL):
                     best, best_t = (fmt, mode), t
         return best
 

@@ -269,8 +269,13 @@ def builtin_profile(ici_bw: Optional[float] = None,
         ici_bw = ICI_BW
     # synthesized wire bytes/elem at the default 1024 quant block; the
     # closed-form pricing uses each group's actual block, so these entries
-    # are documentation + hash material, not the pricing path
-    bytes_per_elem = {"fp32": 4.0, "bf16": 2.0, "q8_block": 1.0 + 4.0 / 1024}
+    # are documentation + hash material, not the pricing path.  fp8 wire
+    # entries (1 B/elem, no scales) appear only where the installed JAX
+    # provides the dtypes, matching the guarded format registry.
+    from ..compat import float8_dtypes
+
+    bytes_per_elem = {"fp32": 4.0, "bf16": 2.0, "q8_block": 1.0 + 4.0 / 1024,
+                      **{name: 1.0 for name in float8_dtypes()}}
     entries = []
     for direction in DIRECTIONS:
         for mode in MODES:

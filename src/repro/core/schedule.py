@@ -97,7 +97,12 @@ surface of production FSDP:
                           scales -- ~4x fewer wire bytes than fp32 -- and
                           dequantizes locally; gradients reduce-scatter to
                           the fp32 master, which the optimizer updates and
-                          requantizes in the same fused pass).
+                          requantizes in the same fused pass), or -- when
+                          the installed JAX provides float8
+                          (``compat.float8_dtypes``) -- "fp8_e4m3"/
+                          "fp8_e5m2" (float8 codes + fp32 master shard:
+                          the all-gather ships the codes at 1 B/element
+                          with no scales, decode is a single cast).
   * ``sharded``        -- per-group knob (see below): False keeps the
                           group's flat buffer replicated instead of
                           FSDP-sharding it.  No gather is emitted at all;
@@ -360,6 +365,12 @@ class CommSchedule:
                 "param_store='q8_block' fixes the all-gather payload (int8 "
                 "codes + fp32 scales); gather_dtype must stay None, got "
                 f"{self.gather_dtype!r}")
+        if self.param_store.startswith("fp8_") and self.gather_dtype \
+                is not None:
+            raise ValueError(
+                f"param_store={self.param_store!r} fixes the all-gather "
+                "payload (the fp8 codes themselves); gather_dtype must "
+                f"stay None, got {self.gather_dtype!r}")
         if self.reduce_wire == "q8_block" and not self.sharded:
             raise ValueError(
                 "reduce_wire='q8_block' quantizes the gradient "
@@ -468,6 +479,17 @@ APPROX_VARIANTS: dict[str, CommSchedule] = {
     "q8_serve_matmul": CommSchedule(param_store="q8_block",
                                     serve_quant_matmul=True),
 }
+
+# fp8 store variants register only where the installed JAX provides the
+# dtypes (compat.float8_dtypes via core.wire.STORE_FORMATS) -- the same
+# guarded-plumbing contract as the fp8 wire formats.
+if "fp8_e4m3" in STORE_FORMATS:
+    APPROX_VARIANTS.update({
+        "fp8_store": CommSchedule(param_store="fp8_e4m3"),
+        "fp8_e5m2_store": CommSchedule(param_store="fp8_e5m2"),
+        "fp8_ring_prefetch": CommSchedule(param_store="fp8_e4m3",
+                                          gather_mode="ring", prefetch=True),
+    })
 
 
 # --------------------------------------------------------------------------- #

@@ -30,6 +30,18 @@ transformation rather than ad-hoc branches):
                      and the shard size are multiples of ``block``) makes
                      the per-shard quantization communication-free: no quant
                      block ever straddles a device boundary.
+  * ``fp8_e4m3`` / ``fp8_e5m2`` -- float8 codes + fp32 master shard,
+                     registered only when the installed JAX provides the
+                     dtypes (``compat.float8_dtypes``).  The state is
+                     ``{"codes", "master"}``: the all-gather ships the fp8
+                     codes (1 B/element, no scales) through
+                     ``payload_all_gather`` and decodes with a single cast;
+                     gradients take the same straight-through proxy route
+                     as q8_block onto the fp32 master.  Re-encoding after
+                     the optimizer step is one rounding cast, fused into
+                     the update kernel (``kernels.fused_update``).  Scale-
+                     free means no planner alignment requirement: fp8
+                     stores work at any shard size.
 
 A store *state* is what ``params[name]`` holds for one group: a bare array
 for flat formats, a dict of arrays otherwise.  The runtime never inspects
@@ -65,6 +77,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..compat import float8_dtypes
 from ..kernels import ops
 from .schedule import CommSchedule
 from .wire import (STORE_FORMATS, WireCodec, codec_gather, codec_gather_ef,
@@ -76,6 +89,10 @@ from .wire import (STORE_FORMATS, WireCodec, codec_gather, codec_gather_ef,
 # states the store builds; checkpoints rely on the names, not the order).
 # An EF-carrying state appends "reduce_ef" (see ``state_keys``).
 Q8_KEYS = ("codes", "master", "scales")
+
+# fp8 state keys: float8 codes + fp32 master, no scales (the fp8 dtype IS
+# the scale structure).  Same ordering/EF conventions as Q8_KEYS.
+FP8_KEYS = ("codes", "master")
 
 # the reduce-wire error-feedback residual leaf (fp32, contribution-sized)
 EF_KEY = "reduce_ef"
@@ -113,6 +130,18 @@ class ParamStore:
         return self.fmt == "q8_block"
 
     @property
+    def fp8(self) -> bool:
+        """True for the float8 code+master formats (fp8_e4m3/fp8_e5m2)."""
+        return self.fmt.startswith("fp8_")
+
+    @property
+    def fp8_dtype(self) -> jnp.dtype:
+        """The float8 code dtype of an fp8 store."""
+        if not self.fp8:
+            raise ValueError(f"fp8_dtype on a {self.fmt!r} store")
+        return jnp.dtype(float8_dtypes()[self.fmt])
+
+    @property
     def has_ef(self) -> bool:
         return self.ef_m > 0
 
@@ -133,16 +162,21 @@ class ParamStore:
     def state_keys(self) -> tuple[str, ...] | None:
         """Leaf names of a dict state (None = the state is a bare array:
         flat formats without an EF residual, the seed's format)."""
-        keys = Q8_KEYS if self.quantized else (
-            ("master",) if self.has_ef else None)
+        if self.quantized:
+            keys = Q8_KEYS
+        elif self.fp8:
+            keys = FP8_KEYS
+        else:
+            keys = ("master",) if self.has_ef else None
         if keys is None:
             return None
         return keys + ((EF_KEY,) if self.has_ef else ())
 
     def leaf_dtype(self, key: str) -> jnp.dtype:
         return jnp.dtype({
-            "codes": jnp.int8, "master": self.storage_dtype
-            if not self.quantized else jnp.dtype(jnp.float32),
+            "codes": self.fp8_dtype if self.fp8 else jnp.dtype(jnp.int8),
+            "master": self.storage_dtype
+            if not (self.quantized or self.fp8) else jnp.dtype(jnp.float32),
             "scales": jnp.float32, EF_KEY: jnp.float32,
         }[key])
 
@@ -231,6 +265,10 @@ class ParamStore:
         elif self.fmt == "bf16":
             state = np.asarray(
                 jnp.asarray(master_f32).astype(jnp.bfloat16))
+        elif self.fp8:
+            codes = np.asarray(
+                jnp.asarray(master_f32).astype(self.fp8_dtype))
+            state = {"codes": codes, "master": master_f32}
         else:
             codes, scales = ops.quantize(jnp.asarray(master_f32), self.block)
             state = {"codes": np.asarray(codes), "master": master_f32,
@@ -252,14 +290,16 @@ class ParamStore:
         updated residual -- see core.wire's EF primitives)."""
         if self.has_ef:
             return {"master": state["master"], EF_KEY: state[EF_KEY]}
-        return state["master"] if self.quantized else state
+        return state["master"] if (self.quantized or self.fp8) else state
 
     def frozen(self, state):
         """The non-differentiable rest of the state (closed over by the
-        loss as constants); None unless the store is quantized."""
-        if not self.quantized:
-            return None
-        return {"codes": state["codes"], "scales": state["scales"]}
+        loss as constants); None unless the store carries codes."""
+        if self.quantized:
+            return {"codes": state["codes"], "scales": state["scales"]}
+        if self.fp8:
+            return {"codes": state["codes"]}
+        return None
 
     def combine(self, trainable, frozen):
         """Inverse of (trainable, frozen): the full state again."""
@@ -267,11 +307,15 @@ class ParamStore:
             state = dict(trainable)
             if self.quantized:
                 state.update(codes=frozen["codes"], scales=frozen["scales"])
+            elif self.fp8:
+                state.update(codes=frozen["codes"])
             return state
-        if not self.quantized:
-            return trainable
-        return {"codes": frozen["codes"], "master": trainable,
-                "scales": frozen["scales"]}
+        if self.quantized:
+            return {"codes": frozen["codes"], "master": trainable,
+                    "scales": frozen["scales"]}
+        if self.fp8:
+            return {"codes": frozen["codes"], "master": trainable}
+        return trainable
 
     def master_f32(self, state) -> jax.Array:
         """fp32 view of the weights the optimizer updates.  For fp32 this is
@@ -291,11 +335,22 @@ class ParamStore:
             core = new_master_f32
         elif self.fmt == "bf16":
             core = new_master_f32.astype(jnp.bfloat16)
+        elif self.fp8:
+            return {"codes": new_master_f32.astype(self.fp8_dtype),
+                    "master": new_master_f32}
         else:
             codes, scales = ops.quantize(new_master_f32, self.block)
             return ({"codes": codes, "master": new_master_f32,
                      "scales": scales})
         return {"master": core} if self.has_ef else core
+
+    def wrap_core(self, core):
+        """Normalize a rebuilt core (bare array or codes dict, e.g. from
+        the fused update kernels) into this store's state layout, minus
+        the EF residual (``attach_ef`` re-attaches that)."""
+        if self.has_ef and not isinstance(core, dict):
+            return {"master": core}
+        return core
 
     def attach_ef(self, core_state, new_ef):
         """Re-attach the updated EF residual to a rebuilt state (the step
@@ -320,7 +375,10 @@ class ParamStore:
         codes + scales move through ``payload_all_gather``, are decoded
         locally (the fused dequant-into-compute-dtype kernel), and
         gradients route straight-through to the master shard via
-        ``codec_grad_proxy``.  When the reduce wire is quantized, the
+        ``codec_grad_proxy``.  fp8 states take the same pre-encoded
+        route with a scale-free payload: the fp8 codes ride
+        ``payload_all_gather`` (1 B/element) and decode is a single
+        deterministic cast.  When the reduce wire is quantized, the
         EF residual is threaded through the ``*_ef`` variants and its
         updated value returns through the grad tree; ``defer_ef`` selects
         the deferred backward (microbatch accumulation: no collective per
@@ -335,7 +393,7 @@ class ParamStore:
         ef = state[EF_KEY] if self.has_ef else None
         if defer_ef and ef is None:
             raise ValueError("defer_ef on a store without an EF residual")
-        if not self.quantized:
+        if not (self.quantized or self.fp8):
             flat = state["master"] if self.has_ef else state
             gcodec = sched.gather_codec(cd)
             pdt = jnp.dtype(flat.dtype)
@@ -347,8 +405,12 @@ class ParamStore:
             return prim(flat, ef, axes, axis_sizes, gcodec,
                         rcodec, cd, pdt, sched.gather_mode,
                         sched.reduce_mode, rc)
-        deq = WireCodec("q8_block", self.block).decode(
-            self.gather_payload(state, axes, axis_sizes, sched), cd)
+        if self.fp8:
+            deq = payload_all_gather(state["codes"], axes, axis_sizes,
+                                     sched.gather_mode, rc).astype(cd)
+        else:
+            deq = WireCodec("q8_block", self.block).decode(
+                self.gather_payload(state, axes, axis_sizes, sched), cd)
         f32 = jnp.dtype(jnp.float32)
         if ef is None:
             proxy = codec_grad_proxy(state["master"], axes, axis_sizes,
@@ -391,7 +453,10 @@ class ParamStore:
     def wire_bytes(self, n_elements: int, wire_dtype) -> int:
         """Bytes one all-gather of an ``n_elements`` buffer puts on the
         wire in this format (per gathered copy; the ~4x q8-vs-fp32 drop
-        ``bench_e2e --schedule`` reports)."""
+        ``bench_e2e --schedule`` reports).  fp8 stores ship their codes:
+        1 B/element flat, no scales overhead."""
+        if self.fp8:
+            return n_elements * self.fp8_dtype.itemsize
         if not self.quantized:
             return n_elements * jnp.dtype(wire_dtype).itemsize
         return WireCodec("q8_block", self.block).wire_bytes(n_elements)

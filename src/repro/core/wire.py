@@ -80,10 +80,13 @@ CAST_FORMATS: dict[str, jnp.dtype] = {
 # every format a WireCodec can take
 WIRE_FORMATS: tuple[str, ...] = tuple(CAST_FORMATS) + ("q8_block",)
 
-# storage formats a ParamStore can take (core.store).  fp8 stores are a
-# ROADMAP item gated on kernel support, so the store registry stays the
-# original three even where fp8 *wire* formats are available.
-STORE_FORMATS: tuple[str, ...] = ("fp32", "bf16", "q8_block")
+# storage formats a ParamStore can take (core.store).  fp8 stores keep
+# an fp32 master shard next to the fp8 codes (the all-gather ships the
+# codes as the wire payload), so they register only where the installed
+# JAX provides the dtypes -- same guarded-plumbing contract as the fp8
+# wire formats above.
+STORE_FORMATS: tuple[str, ...] = ("fp32", "bf16", "q8_block") + tuple(
+    n for n in CAST_FORMATS if n.startswith("fp8_"))
 
 
 def check_wire_format(fmt: str | None, who: str = "wire") -> None:

@@ -30,12 +30,15 @@ from .adam_update import adamw_update as _adamw
 from .blockwise_quant import (dequantize as _deq,
                               dequantize_into as _deq_into, quantize as _q)
 from .encode_ef import encode_ef as _encode_ef
+from .fused_update import (adam8bit_store_update as _adam8_store,
+                           adamw_store_update as _adamw_store)
 from .q8_matmul import (QuantTensor, fold_scales, q8_matmul as _q8mm,
-                        quant_eligible)
+                        q8_slice_cols as _q8_slice, quant_eligible)
 
 __all__ = [
     "quantize", "dequantize", "dequantize_into", "encode_ef", "q8_matmul",
     "quantize_log", "dequantize_log", "adamw_update", "adam8bit_update",
+    "adamw_store_update", "adam8bit_store_update", "q8_slice_cols",
     "QuantTensor", "quant_eligible", "fold_scales",
 ]
 
@@ -122,7 +125,55 @@ def adam8bit_update(w, g, m8, v8, ms, vs, mask, *, lr, b1, b2, eps, wd,
     """Fused 8-bit Adam update (blockwise-quantized moments; the moment
     (de)quant inside is the BITWISE-class blockwise codec).
 
-    PARITY: BITWISE -- vs the jitted kernels/ref.py composition.
+    PARITY: ALLCLOSE -- few-ulp vs the jitted kernels/ref.py
+    composition: the log-space second-moment decode's ``exp`` compiles
+    differently inside the pallas interpreter than in the fused XLA
+    reference graph (last-ulp transcendental drift, amplified to at
+    most a few representation steps through the update chain).
     """
     return _adam8(w, g, m8, v8, ms, vs, mask, lr, b1, b2, eps, wd, c1, c2,
                   block=block, interpret=_interpret())
+
+
+def adamw_store_update(w, g, m, v, mask, *, lr, b1, b2, eps, wd, c1, c2,
+                       fmt: str = "fp32", block: int = 1024):
+    """Fused AdamW step + ParamStore rebuild: moment update, weight
+    write, and the storage re-encode (bf16 round / fp8 cast / q8
+    blockwise requantize) in one pass -- the optimizer hot path for every
+    store format.  Returns ``(core, m2, v2)``; ``core`` mirrors
+    ``ParamStore.rebuild``.
+
+    PARITY: BITWISE -- vs the jitted kernels/ref.py composition.
+    """
+    return _adamw_store(w, g, m, v, mask, lr, b1, b2, eps, wd, c1, c2,
+                        fmt=fmt, block=block, interpret=_interpret())
+
+
+def adam8bit_store_update(w, g, m8, v8, ms, vs, mask, *, lr, b1, b2, eps,
+                          wd, c1, c2, fmt: str = "fp32",
+                          block: int = 1024):
+    """Fused 8-bit Adam step + ParamStore rebuild: blockwise moment
+    dequant/requant AND the storage re-encode in one pass.  Returns
+    ``(core, m8', v8', ms', vs')``.
+
+    PARITY: ALLCLOSE -- few-ulp vs the jitted kernels/ref.py
+    composition, inherited from ``adam8bit_update``'s log-space
+    second-moment ``exp`` (compiles differently in the pallas
+    interpreter vs the fused reference graph); the tests pin
+    integer-view distance <= 4 on every leaf.
+    """
+    return _adam8_store(w, g, m8, v8, ms, vs, mask, lr, b1, b2, eps, wd,
+                        c1, c2, fmt=fmt, block=block,
+                        interpret=_interpret())
+
+
+def q8_slice_cols(qt, start, width: int):
+    """Column slice of a gathered q8 ``QuantTensor`` when the scale
+    layout permits (serve-path KV head slicing; ``start`` may be traced).
+    Returns the sliced QuantTensor, or None when the slice is not
+    scale-representable (caller falls back to ``to_dense``).
+
+    PARITY: BITWISE -- pure index/layout transformation; the sliced
+    tensor dequantizes to exactly the sliced dequantized original.
+    """
+    return _q8_slice(qt, start, width)

@@ -18,12 +18,21 @@ block-aligned tensor starts):
     block j of row k covers columns [j*block, (j+1)*block), scale
     s(k, j) = scales[k*nj + j].
   * case B -- ``block % N == 0``: one block spans r = block/N whole rows,
-    s(k) = scales[k // r] independent of n (nj = 1).
+    s(k) = scales[k // r] independent of n (nj = 1).  K need NOT be a
+    multiple of r: a trailing partial block (ceil(K/r) scales) folds to
+    per-row scales truncated at K -- the codes and scales are the
+    buffer's own, so the dequant semantics match the fallback path
+    bitwise whatever shares the overhang block.
 
 Both cases reduce to one contract: scales arranged (nj, K); for group j,
 ``y[:, cols_j] = rowquant(x * s[j]) @ codes[:, cols_j]`` rescaled by the
 activation row scale.  Shapes outside these two cases are ineligible
 (``quant_eligible``) and fall back to the fused dequantize.
+
+``q8_slice_cols`` slices columns out of a QuantTensor when the scale
+layout permits (case B -> per-row scales, any slice; case A -> block-
+aligned slices), so the serve path's KV head slicing stays on the int8
+GEMM instead of densifying the whole projection.
 
 Parity class: ALLCLOSE vs the dense reference (x @ dequantize(w)) -- the
 activation row-quantization is new error by design, bounded by ~1/254
@@ -44,12 +53,12 @@ from .blockwise_quant import _resolve_tile  # noqa: F401  (shared tiling doc)
 
 def quant_eligible(shape: tuple[int, ...], block: int) -> bool:
     """Can a tensor of ``shape`` run the int8-GEMM path with this quant
-    block?  2-D, whole number of blocks, and a separable scale layout."""
+    block?  2-D with a separable scale layout: N % block == 0 (case A)
+    or block % N == 0 (case B; K need not be a multiple of block//N --
+    the trailing partial block folds to truncated per-row scales)."""
     if len(shape) != 2:
         return False
     k, n = shape
-    if (k * n) % block:
-        return False
     return n % block == 0 or block % n == 0
 
 
@@ -61,7 +70,9 @@ def fold_scales(scales_flat, k: int, n: int, block: int) -> jax.Array:
         return scales_flat.reshape(k, nj).T           # s[j, k]
     if block % n == 0:
         r = block // n
-        return jnp.repeat(scales_flat, r).reshape(1, k)
+        # ceil(k/r) scales cover k rows; truncate the overhang block's
+        # repeat at k (partial last block, see module docstring)
+        return jnp.repeat(scales_flat, r)[:k].reshape(1, k)
     raise ValueError(
         f"q8_matmul: weight ({k}, {n}) has no separable scale layout for "
         f"block {block} (need N % block == 0 or block % N == 0)")
@@ -89,8 +100,20 @@ def q8_matmul(x, codes, scales, *, block: int = 1024, out_dtype=None,
     ``out_dtype`` (default: x.dtype) without ever materializing the
     dequantized weight."""
     k, n = codes.shape
-    _check_blocking(k * n, block, "q8_matmul")
-    _check_scales(k * n, block, scales.shape[-1], "q8_matmul")
+    if n % block == 0:
+        _check_blocking(k * n, block, "q8_matmul")
+        _check_scales(k * n, block, scales.shape[-1], "q8_matmul")
+    elif block % n == 0:
+        # case B tolerates a trailing partial block: ceil-count scales
+        nb = -(-(k * n) // block)
+        if scales.shape[-1] != nb:
+            raise ValueError(
+                f"q8_matmul: expected {nb} block scales for ({k}, {n}) "
+                f"with block {block}, got {scales.shape[-1]}")
+    else:
+        raise ValueError(
+            f"q8_matmul: weight ({k}, {n}) has no separable scale layout "
+            f"for block {block} (need N % block == 0 or block % N == 0)")
     out_dtype = jnp.dtype(out_dtype if out_dtype is not None else x.dtype)
     lead = x.shape[:-1]
     m = 1
@@ -150,3 +173,45 @@ jax.tree_util.register_pytree_node(
     lambda qt: ((qt.codes, qt.scales), qt.block),
     lambda block, leaves: QuantTensor(leaves[0], leaves[1], block),
 )
+
+
+def q8_slice_cols(qt: QuantTensor, start, width: int):
+    """Slice columns [start, start + width) out of a (K, N) QuantTensor
+    without densifying, when the scale layout permits:
+
+      * case B (``block % N == 0``): the block scale never varies along
+        n, so ANY column slice keeps the layout.  Re-expressed with
+        per-row scales (new block = width, nj = 1), truncating the
+        overhang block's repeat at K -- dequant values are exactly those
+        of the sliced dense weight.  ``start`` may be traced (the serve
+        path slices by a ``lax.axis_index``-derived KV head).
+      * case A (``N % block == 0``): only whole-block slices are
+        representable -- requires ``width % block == 0`` and ``start``
+        a block multiple.  A traced ``start`` is accepted under the
+        caller contract ``start % width == 0`` (head slicing), which
+        implies block alignment when ``width % block == 0``.
+
+    Returns the sliced QuantTensor, or None when the slice is not
+    scale-representable (caller falls back to ``to_dense``).
+    """
+    k, n = qt.codes.shape
+    block = qt.block
+    width = int(width)
+    if not 0 < width <= n:
+        raise ValueError(
+            f"q8_slice_cols: width {width} out of range for N={n}")
+    if block % n == 0:
+        r = block // n
+        row_scales = jnp.repeat(qt.scales, r)[:k]
+        codes = jax.lax.dynamic_slice(qt.codes, (0, start), (k, width))
+        return QuantTensor(codes, row_scales, width)
+    if n % block == 0 and width % block == 0:
+        if isinstance(start, int) and start % block:
+            return None
+        nj = n // block
+        codes = jax.lax.dynamic_slice(qt.codes, (0, start), (k, width))
+        s2 = jax.lax.dynamic_slice(qt.scales.reshape(k, nj),
+                                   (0, start // block),
+                                   (k, width // block))
+        return QuantTensor(codes, s2.reshape(-1), block)
+    return None

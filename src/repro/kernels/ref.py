@@ -61,3 +61,42 @@ def adam8bit_update_ref(w, g, m8, v8, ms, vs, mask, lr, b1, b2, eps, wd,
     m8o, mso = quantize_blockwise(m2, block)
     v8o, vso = quantize_blockwise_log(v2, block)
     return w2, m8o, v8o, mso, vso
+
+
+def store_pack_ref(w2_f32, fmt: str, block: int):
+    """Unfused ``ParamStore.rebuild`` semantics on an updated fp32 buffer:
+    the storage re-encode the fused update kernels fold into their
+    epilogue (bare array for flat formats, codes(+scales)+master dict for
+    fp8/q8)."""
+    if fmt == "fp32":
+        return w2_f32
+    if fmt == "bf16":
+        return w2_f32.astype(jnp.bfloat16)
+    if fmt.startswith("fp8_"):
+        from ..compat import float8_dtypes
+
+        return {"codes": w2_f32.astype(float8_dtypes()[fmt]),
+                "master": w2_f32}
+    if fmt == "q8_block":
+        codes, scales = quantize_blockwise(w2_f32, block)
+        return {"codes": codes, "master": w2_f32, "scales": scales}
+    raise ValueError(f"unknown store fmt {fmt!r}")
+
+
+def adamw_store_update_ref(w, g, m, v, mask, lr, b1, b2, eps, wd, c1, c2,
+                           fmt: str, block: int):
+    """Unfused oracle for the fused AdamW + store-rebuild kernel: the
+    update math on the fp32 view of the storage buffer, THEN the store
+    re-encode as a second full pass."""
+    w2, m2, v2 = adamw_update_ref(w.astype(jnp.float32), g, m, v, mask,
+                                  lr, b1, b2, eps, wd, c1, c2)
+    return store_pack_ref(w2, fmt, block), m2, v2
+
+
+def adam8bit_store_update_ref(w, g, m8, v8, ms, vs, mask, lr, b1, b2, eps,
+                              wd, c1, c2, fmt: str, block: int):
+    """Unfused oracle for the fused 8-bit Adam + store-rebuild kernel."""
+    w2, m8o, v8o, mso, vso = adam8bit_update_ref(
+        w.astype(jnp.float32), g, m8, v8, ms, vs, mask, lr, b1, b2, eps,
+        wd, c1, c2, block)
+    return store_pack_ref(w2, fmt, block), m8o, v8o, mso, vso

@@ -236,13 +236,17 @@ def attention(
         b = (p[prefix + name + "_b"].astype(x.dtype)
              if cfg.qkv_bias and prefix + name + "_b" in p else None)
         if kv and kv_rep:
-            # head slicing needs the dense weight (QuantTensor scale
-            # blocks are not column-sliceable)
-            wd = lax.dynamic_slice(to_dense(w, x.dtype),
-                                   (0, kv_head * hd), (w.shape[0], hd))
+            sl = (ops.q8_slice_cols(w, kv_head * hd, hd)
+                  if isinstance(w, ops.QuantTensor) else None)
+            if sl is not None:
+                # scale layout is column-sliceable: stay on the int8 GEMM
+                y = dense(x, sl)
+            else:
+                wd = lax.dynamic_slice(to_dense(w, x.dtype),
+                                       (0, kv_head * hd), (w.shape[0], hd))
+                y = x @ wd
             if b is not None:
                 b = lax.dynamic_slice(b, (kv_head * hd,), (hd,))
-            y = x @ wd
         else:
             y = dense(x, w)
         if b is not None:

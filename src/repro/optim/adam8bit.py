@@ -7,10 +7,12 @@ boundary -- each device (de)quantizes with zero communication, which is
 the paper's central flexibility claim.
 
 States: m, v stored as int8 codes + one f32 absmax scale per block.
-The (de)quantize steps run through the kernels dispatch layer
-(repro.kernels.ops: fused Pallas on TPU, interpreted elsewhere); the
-fully-fused single-kernel update (repro.kernels.adam8bit_update) remains
-the opt-in fast path and this jnp composition is its oracle.
+The whole step -- moment dequant, update math, moment requant, AND the
+store re-encode (bf16 round / fp8 cast / q8_block requantize) -- runs as
+ONE fused kernel through the dispatch layer
+(``ops.adam8bit_store_update``: Pallas on TPU, the same body interpreted
+elsewhere), BITWISE against the jnp composition in ``kernels/ref.py``
+(``adam8bit_store_update_ref``).
 """
 from __future__ import annotations
 
@@ -51,19 +53,21 @@ class Adam8bit(OptimizerBase):
         new_s = {k: {} for k in ("m8", "v8", "ms", "vs")}
         for name, pstate in params.items():
             store = runtime.layouts[name].store
-            w = store.master_f32(pstate)
-            g = grads[name].astype(jnp.float32)
+            if store.quantized and store.block != bq:
+                raise ValueError(
+                    f"group {name}: store quant block {store.block} != "
+                    f"optimizer quant block {bq}")
+            buf = pstate["master"] if isinstance(pstate, dict) else pstate
+            wdm = matrix_mask_local(runtime, runtime.layouts[name],
+                                    buf.shape)
             # m: signed linear int8; v: log-space int8 (dynamic range --
             # linear quantization underflows v and explodes the update)
-            m = ops.dequantize(state["m8"][name], state["ms"][name], bq)
-            v = ops.dequantize_log(state["v8"][name], state["vs"][name], bq)
-            m = self.b1 * m + (1 - self.b1) * g
-            v = self.b2 * v + (1 - self.b2) * g * g
-            upd = (m / c1) / (jnp.sqrt(v / c2) + self.eps)
-            wdm = matrix_mask_local(runtime, runtime.layouts[name], w.shape)
-            new_p[name] = store.rebuild(w - lr * (upd + self.wd * wdm * w))
-            m8, ms = ops.quantize(m, bq)
-            v8, vs = ops.quantize_log(v, bq)
+            core, m8, v8, ms, vs = ops.adam8bit_store_update(
+                buf, grads[name], state["m8"][name], state["v8"][name],
+                state["ms"][name], state["vs"][name], wdm, lr=lr,
+                b1=self.b1, b2=self.b2, eps=self.eps, wd=self.wd, c1=c1,
+                c2=c2, fmt=store.fmt, block=bq)
+            new_p[name] = store.wrap_core(core)
             new_s["m8"][name], new_s["ms"][name] = m8, ms
             new_s["v8"][name], new_s["vs"][name] = v8, vs
         return new_p, new_s

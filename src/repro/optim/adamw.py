@@ -1,14 +1,18 @@
 """AdamW on flat DBuffer shards (fp32 master weights, group-fused update).
 
-The master weights come from each group's ParamStore (``master_f32`` is the
-buffer itself for fp32 stores -- bitwise-identical update graph -- and the
-fp32 master shard for q8_block); ``rebuild`` writes the update back in the
-group's storage format, requantizing codes/scales in the same fused pass
-for quantized stores."""
+The whole per-group step -- moment update, weight write, AND the store
+re-encode (``ParamStore.rebuild`` semantics: bf16 round / fp8 cast /
+q8_block requantize) -- runs as ONE fused kernel through the dispatch
+layer (``ops.adamw_store_update``: Pallas on TPU, the same kernel body
+interpreted elsewhere).  The jnp composition it replaces lives on as the
+parity oracle in ``kernels/ref.py`` (``adamw_store_update_ref``); the
+fused path is BITWISE against it, so this module is bit-for-bit the
+pre-fusion optimizer."""
 from __future__ import annotations
 
 import jax.numpy as jnp
 
+from ..kernels import ops
 from .common import OptimizerBase, matrix_mask_local
 
 
@@ -27,12 +31,13 @@ class AdamW(OptimizerBase):
         new_p, new_m, new_v = {}, {}, {}
         for name, pstate in params.items():
             store = runtime.layouts[name].store
-            w = store.master_f32(pstate)
-            g = grads[name].astype(jnp.float32)
-            m = self.b1 * state["m"][name] + (1 - self.b1) * g
-            v = self.b2 * state["v"][name] + (1 - self.b2) * g * g
-            upd = (m / c1) / (jnp.sqrt(v / c2) + self.eps)
-            wdm = matrix_mask_local(runtime, runtime.layouts[name], w.shape)
-            new_p[name] = store.rebuild(w - lr * (upd + self.wd * wdm * w))
-            new_m[name], new_v[name] = m, v
+            buf = pstate["master"] if isinstance(pstate, dict) else pstate
+            wdm = matrix_mask_local(runtime, runtime.layouts[name],
+                                    buf.shape)
+            core, m2, v2 = ops.adamw_store_update(
+                buf, grads[name], state["m"][name], state["v"][name], wdm,
+                lr=lr, b1=self.b1, b2=self.b2, eps=self.eps, wd=self.wd,
+                c1=c1, c2=c2, fmt=store.fmt, block=store.block)
+            new_p[name] = store.wrap_core(core)
+            new_m[name], new_v[name] = m2, v2
         return new_p, {"m": new_m, "v": new_v}

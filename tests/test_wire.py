@@ -510,9 +510,10 @@ def test_fp8_dtypes_guarded():
     # ...and a legal cast reduce wire
     s = CommSchedule(reduce_wire="fp8_e5m2")
     assert s.reduce_codec(jnp.dtype(jnp.bfloat16)).fmt == "fp8_e5m2"
-    # but NOT yet a ParamStore format (kernel support is a ROADMAP item)
-    with pytest.raises(ValueError):
-        ParamStore("fp8_e4m3")
+    # ...and, since the fused update kernels landed, a ParamStore format
+    # too (fp8 codes + fp32 master; tests/test_fp8_store.py owns it)
+    st = ParamStore("fp8_e4m3")
+    assert st.fp8 and st.align() == 1
 
 
 def test_fp8_gather_wire_train_smoke():
